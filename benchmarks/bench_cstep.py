@@ -1,0 +1,69 @@
+"""Paper runtime claim: C steps are cheap relative to L steps. Measures
+us/call for every C-step solver vs weight count (and the Pallas kernels
+in interpret mode vs their jnp references for correctness-path parity).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes import (
+    AdaptiveQuantization, ConstraintL0Pruning, LowRank, Ternarize,
+    optimal_codebook_dp)
+from repro.kernels.kmeans import ops as kops
+from repro.kernels.prune import ops as pops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for p in (1 << 16, 1 << 20):
+        w = jax.random.normal(key, (p,))
+        q = AdaptiveQuantization(k=16, iters=10)
+        th = q.init(w)
+        us = _time(jax.jit(lambda w_: q.compress(w_, th)), w)
+        rows.append({"name": f"cstep/kmeans16/P={p}", "us_per_call": us,
+                     "derived": "searchsorted Lloyd x10"})
+
+        pr = ConstraintL0Pruning(kappa=p // 20)
+        us = _time(jax.jit(lambda w_: pr.compress(w_, None)), w)
+        rows.append({"name": f"cstep/prune-l0/P={p}", "us_per_call": us,
+                     "derived": "top_k"})
+
+        if p <= (1 << 16):  # interpret-mode python overhead at 1M+
+            us = _time(lambda w_: pops.topk_mask(w_, p // 20,
+                                                 use_pallas=True), w)
+            rows.append({"name": f"cstep/prune-bisect/P={p}",
+                         "us_per_call": us,
+                         "derived": "pallas interpret (TPU path)"})
+
+        t = Ternarize()
+        us = _time(jax.jit(lambda w_: t.compress(w_, None)), w)
+        rows.append({"name": f"cstep/ternary/P={p}", "us_per_call": us,
+                     "derived": "sort+cumsum"})
+
+    w2 = jax.random.normal(key, (1024, 512))
+    lr = LowRank(target_rank=32, randomized=False)
+    us = _time(jax.jit(lambda w_: lr.compress(w_, None)), w2)
+    rows.append({"name": "cstep/svd-1024x512", "us_per_call": us,
+                 "derived": "exact svd"})
+    lrr = LowRank(target_rank=32, randomized=True)
+    us = _time(jax.jit(lambda w_: lrr.compress(w_, None)), w2)
+    rows.append({"name": "cstep/rsvd-1024x512", "us_per_call": us,
+                 "derived": "randomized (Halko) — the sharded path"})
+
+    w1 = jax.random.normal(key, (1 << 18,))
+    us = _time(lambda w_: optimal_codebook_dp(w_, 8, bins=1024), w1)
+    rows.append({"name": "cstep/dp-optimal-k8", "us_per_call": us,
+                 "derived": "histogram DP (exact on bins)"})
+    return rows

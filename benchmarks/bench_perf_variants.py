@@ -1,0 +1,30 @@
+"""§Perf variant comparison from results/perf/*.json: paper-faithful
+baseline vs beyond-paper variants for the three hillclimbed cells."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run() -> list[dict]:
+    rows = []
+    files = sorted(glob.glob("results/perf/*.json"))
+    if not files:
+        return [{"name": "perf/missing", "us_per_call": 0.0,
+                 "derived": "run launch.dryrun --variant ... --out "
+                            "results/perf first"}]
+    for f in files:
+        d = json.load(open(f))
+        if d.get("status") != "ok":
+            continue
+        variant = d.get("variant") or "baseline"
+        t = max(d["t_compute_s"], d["t_memory_s"], d["t_collective_s"])
+        rows.append({
+            "name": f"perf/{d['arch']}/{d['shape']}/{variant}",
+            "us_per_call": t * 1e6,
+            "derived": (f"bottleneck={d['bottleneck']} "
+                        f"tm={d['t_memory_s']:.3e} "
+                        f"tl={d['t_collective_s']:.3e}"),
+        })
+    return rows

@@ -1,0 +1,34 @@
+"""Paper Fig. 3 (left): LC quantization vs direct quantization across
+codebook sizes — LC must dominate the DC (quantize-only) curve."""
+from __future__ import annotations
+
+import time
+
+from repro.core.schemes import AdaptiveQuantization
+
+from benchmarks.common import (
+    direct_compress, per_layer_tasks, reference_problem, run_lc)
+
+
+def tasks_for(k):
+    return per_layer_tasks(lambda: AdaptiveQuantization(k=k, iters=20))
+
+
+def run() -> list[dict]:
+    prob = reference_problem()
+    rows = [{"name": "quantize/reference", "us_per_call": 0.0,
+             "derived": f"test_err={prob.ref_test_err:.4f}"}]
+    for k in (2, 4, 16):
+        dc = direct_compress(prob, tasks_for(k))
+        t0 = time.time()
+        lc = run_lc(prob, tasks_for(k), n_steps=20, iters_per_l=40)
+        us = (time.time() - t0) * 1e6
+        rows.append({
+            "name": f"quantize/K={k}",
+            "us_per_call": us,
+            "derived": (f"lc_err={lc['test_err']:.4f} "
+                        f"dc_err={dc['test_err']:.4f} "
+                        f"ratio={lc['ratio']:.1f}x "
+                        f"lc<=dc={lc['test_err'] <= dc['test_err'] + 0.02}"),
+        })
+    return rows

@@ -1,0 +1,34 @@
+"""Roofline summary from the dry-run artifacts (results/dryrun/*.json):
+per (arch × shape × mesh): three terms, bottleneck, modeled step time.
+``us_per_call`` = modeled step time (max of the three terms)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run() -> list[dict]:
+    rows = []
+    files = sorted(glob.glob("results/dryrun/*.json"))
+    if not files:
+        return [{"name": "roofline/missing", "us_per_call": 0.0,
+                 "derived": "run: python -m repro.launch.dryrun --all"}]
+    for f in files:
+        d = json.load(open(f))
+        cell = f"{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d["status"] != "ok":
+            rows.append({"name": f"roofline/{cell}", "us_per_call": 0.0,
+                         "derived": d["status"]})
+            continue
+        t = max(d["t_compute_s"], d["t_memory_s"], d["t_collective_s"])
+        rows.append({
+            "name": f"roofline/{cell}",
+            "us_per_call": t * 1e6,
+            "derived": (f"bottleneck={d['bottleneck']} "
+                        f"tc={d['t_compute_s']:.2e} "
+                        f"tm={d['t_memory_s']:.2e} "
+                        f"tl={d['t_collective_s']:.2e} "
+                        f"rooffrac={d['roofline_fraction']:.4f}"),
+        })
+    return rows

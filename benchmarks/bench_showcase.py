@@ -1,0 +1,64 @@
+"""Paper Table 2: six mix-and-match compression tasks on the
+LeNet300-analog — the flexibility showcase. Each row = one
+compression_tasks structure, verbatim in spirit."""
+from __future__ import annotations
+
+import time
+
+from repro.core import AsIs, AsVector, CompressionTask
+from repro.core.schemes import (
+    AdaptiveQuantization, AdditiveCombination, ConstraintL0Pruning,
+    LowRank, RankSelection)
+
+from benchmarks.common import DIMS, reference_problem, run_lc
+
+
+def _p_total():
+    return sum(DIMS[i] * DIMS[i + 1] for i in range(len(DIMS) - 1))
+
+
+def showcase_rows():
+    p = _p_total()
+    from benchmarks.common import per_layer_tasks
+    return [
+        ("quantize-all-k2",
+         per_layer_tasks(lambda: AdaptiveQuantization(k=2))),
+        ("quantize-l1-l3", [CompressionTask(
+            "q13", r"l[02]/w$", AsVector(), AdaptiveQuantization(k=2))]),
+        ("prune-5pct", [CompressionTask(
+            "p", r"l\d/w$", AsVector(),
+            ConstraintL0Pruning(kappa=int(0.05 * p)))]),
+        ("prune1pct+quant-additive", [CompressionTask(
+            "pq", r"l\d/w$", AsVector(),
+            AdditiveCombination([
+                ConstraintL0Pruning(kappa=int(0.01 * p)),
+                AdaptiveQuantization(k=2)], iters=2))]),
+        ("prune-l1/lowrank-l2/quant-l3", [
+            CompressionTask("p1", r"l0/w$", AsVector(),
+                            ConstraintL0Pruning(kappa=5000)),
+            CompressionTask("lr2", r"l1/w$", AsIs(), LowRank(10)),
+            CompressionTask("q3", r"l2/w$", AsVector(),
+                            AdaptiveQuantization(k=2))]),
+        ("rank-selection-a1e-6", [CompressionTask(
+            "rs", r"l\d/w$", AsIs(), RankSelection(alpha=1e-6))]),
+    ]
+
+
+def run() -> list[dict]:
+    prob = reference_problem()
+    rows = [{"name": "showcase/reference", "us_per_call": 0.0,
+             "derived": (f"train_err={prob.ref_train_err:.4f} "
+                         f"test_err={prob.ref_test_err:.4f}")}]
+    for name, tasks in showcase_rows():
+        t0 = time.time()
+        lc = run_lc(prob, tasks, n_steps=20, iters_per_l=40,
+                    a=1.4 if "lowrank" in name or "rank" in name else 1.3)
+        us = (time.time() - t0) * 1e6
+        rows.append({
+            "name": f"showcase/{name}",
+            "us_per_call": us,
+            "derived": (f"train_err={lc['train_err']:.4f} "
+                        f"test_err={lc['test_err']:.4f} "
+                        f"ratio={lc['ratio']:.1f}x"),
+        })
+    return rows

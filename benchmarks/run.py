@@ -1,0 +1,48 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only quantize,prune,...]
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+MODULES = ["quantize", "prune", "lowrank", "showcase", "cstep", "serve",
+           "roofline", "perf_variants"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod = __import__(f"benchmarks.bench_{name}",
+                         fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the suite going
+            print(f"bench_{name},0,ERROR {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for r in rows:
+            derived = str(r["derived"]).replace(",", ";")
+            print(f"{r['name']},{r['us_per_call']:.1f},{derived}",
+                  flush=True)
+        print(f"# bench_{name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

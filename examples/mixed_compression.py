@@ -1,0 +1,49 @@
+"""Mix-and-match compression (paper Table 2, last row + Fig. 6):
+prune the first layer, low-rank the second, quantize the third — plus a
+single shared codebook with additive pruning, exactly the paper's
+"flexibility showcase".
+
+    PYTHONPATH=src python examples/mixed_compression.py
+"""
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import AsIs, AsVector, CompressionTask
+from repro.core.schemes import (
+    AdaptiveQuantization, AdditiveCombination, ConstraintL0Pruning,
+    LowRank)
+
+from benchmarks.common import reference_problem, run_lc
+
+
+def main():
+    prob = reference_problem()
+    print(f"reference test error: {prob.ref_test_err:.4f}")
+
+    # paper Table 2 last row: prune l1, low-rank l2, quantize l3
+    mixed = [
+        CompressionTask("p1", r"l0/w$", AsVector(),
+                        ConstraintL0Pruning(kappa=5000)),
+        CompressionTask("lr2", r"l1/w$", AsIs(), LowRank(target_rank=10)),
+        CompressionTask("q3", r"l2/w$", AsVector(),
+                        AdaptiveQuantization(k=2)),
+    ]
+    out = run_lc(prob, mixed)
+    print(f"[prune | low-rank | quantize] test error: "
+          f"{out['test_err']:.4f}, ratio {out['ratio']:.1f}x")
+
+    # paper Table 2 row 5: single codebook + additive pruning, all layers
+    additive = [CompressionTask(
+        "pq", r"l\d/w$", AsVector(),
+        AdditiveCombination([
+            ConstraintL0Pruning(kappa=2662),       # 1% of weights
+            AdaptiveQuantization(k=2),
+        ], iters=2))]
+    out2 = run_lc(prob, additive)
+    print(f"[1%-prune + quantize, additive] test error: "
+          f"{out2['test_err']:.4f}, ratio {out2['ratio']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

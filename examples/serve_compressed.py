@@ -1,0 +1,57 @@
+"""Batched serving of an LC-quantized model (the paper's deployment
+story): quantize all big matrices to 16-entry codebooks, then run
+batched prefill + decode on the compressed weights.
+
+    PYTHONPATH=src python examples/serve_compressed.py
+"""
+import sys
+import os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import lc_param_paths
+from repro.models.transformer import init_params
+from repro.runtime.server import (
+    Server, quantize_params_for_serving, serving_bits)
+
+
+def main():
+    cfg = reduced_config(get_config("phi3-mini-3.8b"))
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+
+    paths = lc_param_paths(params)
+    packed, qparams = quantize_params_for_serving(params, paths, k=16)
+    comp_bits, dense_bits = serving_bits(packed)
+    print(f"quantized {len(paths)} matrices: "
+          f"{dense_bits / 8e6:.2f} MB → {comp_bits / 8e6:.2f} MB "
+          f"({dense_bits / comp_bits:.1f}× smaller)")
+
+    prompts = jax.random.randint(key, (4, 32), 0, cfg.vocab_size,
+                                 jnp.int32)
+    for name, p in [("dense", params), ("lc-quantized", qparams)]:
+        server = Server(cfg, p, mesh=make_debug_mesh(), max_len=64)
+        t0 = time.time()
+        res = server.generate(prompts, 16)
+        dt = time.time() - t0
+        print(f"{name:13s}: {res.tokens.shape} tokens in {dt:.2f}s, "
+              f"sample={res.tokens[0][:8]}")
+
+    # compressed-weight kernels: the TPU path streams uint8 indices
+    # through kernels/quant_matmul (validated in tests); HBM per matmul:
+    any_path = paths[0]
+    idx, cb = packed[any_path]
+    print(f"\nper-matmul HBM: bf16 {idx.size * 2} B → "
+          f"uint8+codebook {idx.size + cb.size * 4} B "
+          f"(~2×; 4-bit packing → 4×)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,399 @@
+"""Trip-count-aware HLO cost analyzer.
+
+``compiled.cost_analysis()`` (XLA HloCostAnalysis) counts a while-loop
+body **once**, so any scan-over-layers model is underreported by ~n_layers×
+in FLOPs, bytes, and (critically) collectives. This analyzer parses the
+post-partitioning HLO text and:
+
+* recursively multiplies `while` bodies by their trip count (recovered
+  from the loop-condition's compare constant — the `lax.scan`/`fori_loop`
+  lowering pattern);
+* counts dot FLOPs exactly (2 · |output| · Π contracting dims) including
+  inside fusion computations;
+* models HBM traffic at **post-fusion granularity**: one fusion op = its
+  operands + outputs (what a fused TPU kernel actually streams), skipping
+  pure data-movement ops (tuple/GTE/bitcast/parameter/constant);
+* attributes collective bytes (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute) by primitive, loop-multiplied.
+
+All numbers are per-device (the SPMD module is per-device).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[a-z]\w*\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)="
+    r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "call", "custom-call", "iota",
+               "rng-bit-generator", "copy-start", "copy-done",
+               # loop-carry copies: elided by buffer aliasing on TPU
+               "copy"}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[float, float]:
+    elems = 0.0
+    byts = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+    operands: list[str] = field(default_factory=list)
+    called: list[str] = field(default_factory=list)
+    raw: str = ""
+
+
+@dataclass
+class Stats:
+    flops: float = 0.0
+    bytes: float = 0.0        # upper bound: all op I/O at HLO granularity
+    bytes_major: float = 0.0  # TPU-fused estimate: dot/reduce/gather I/O +
+    #                           2×output for pure-elementwise chains
+    coll: dict[str, float] = field(default_factory=dict)
+    coll_count: float = 0.0
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_major += other.bytes_major * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        self.coll_count += other.coll_count * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def parse_module(hlo_text: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    cur: list[Op] | None = None
+    for line in hlo_text.splitlines():
+        if line.rstrip().endswith("{") and "->" in line:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = []
+                comps[m.group(1)] = cur
+                if line.strip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        called = []
+        for cm in _CALL_ATTR_RE.finditer(rest):
+            called.extend(x.strip().lstrip("%")
+                          for x in cm.group(1).split(","))
+        # operands: portion of `rest` before the closing paren of the
+        # argument list (attrs follow) — take %refs that are not attr calls
+        arg_str = rest.split("),")[0]
+        called_set = set(called)
+        operands = [o for o in _OPERAND_RE.findall(arg_str)
+                    if o not in called_set]
+        cur.append(Op(name, type_str, opcode, rest, operands, called,
+                      raw=line))
+    return comps
+
+
+def _trip_count(cond_ops: list[Op]) -> float:
+    """Largest integer constant in the loop condition ≈ trip count (the
+    jax scan/fori lowering compares the induction var against the bound)."""
+    best = 1
+    for op in cond_ops:
+        mm = _CONST_RE.search(op.raw)
+        if mm:
+            best = max(best, int(mm.group(1)))
+    return float(best)
+
+
+def _dot_flops(op: Op, shapes: dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(op.type_str)
+    lhs = op.operands[0] if op.operands else None
+    contract = _CONTRACT_RE.search(op.rest)
+    k = 1.0
+    if lhs and lhs in shapes and contract:
+        dims = [int(d) for d in contract.group(1).split(",") if d]
+        m = _SHAPE_RE.search(shapes[lhs])
+        if m:
+            sizes = [int(d) for d in m.group(2).split(",") if d]
+            for d in dims:
+                if d < len(sizes):
+                    k *= sizes[d]
+    return 2.0 * out_elems * k
+
+
+class Analyzer:
+    """``skip_scopes``: jax.named_scope tags whose ops are treated as one
+    fused Pallas kernel — FLOPs and collectives still count, but HBM
+    bytes are excluded (the kernel keeps intermediates in VMEM); the
+    caller adds the kernel's analytic boundary I/O instead. Used for
+    kernels/flash_attention and kernels/quant_matmul, whose Pallas
+    implementations are validated in tests/ but cannot be Mosaic-compiled
+    in the CPU dry-run container."""
+
+    def __init__(self, hlo_text: str, skip_scopes: tuple = ()):
+        self.skip_scopes = tuple(skip_scopes)
+        self.skipped_ops = 0
+        self.comps = parse_module(hlo_text)
+        self.shapes: dict[str, str] = {}
+        self.ops: dict[str, Op] = {}
+        for ops in self.comps.values():
+            for op in ops:
+                self.shapes[op.name] = op.type_str
+                self.ops[op.name] = op
+        self._memo: dict[str, Stats] = {}
+
+    def _operand_bytes(self, name: str) -> float:
+        """Bytes read for an operand; sees through XLA:CPU's convert
+        fusions (bf16 weights upcast to f32 for CPU dots — native on
+        TPU) by charging the pre-convert source size."""
+        elems, full = _shape_elems_bytes(self.shapes.get(name, ""))
+        prod = self.ops.get(name)
+        if prod is not None and prod.opcode == "fusion" and prod.called:
+            body = self.comps.get(prod.called[0], [])
+            _PURE = {"parameter", "constant", "convert", "bitcast",
+                     "reshape", "transpose", "copy", "broadcast",
+                     "dynamic-slice"}
+            if body and all(o.opcode in _PURE for o in body) \
+                    and any(o.opcode == "convert" for o in body):
+                # charge the consumer read at the SOURCE dtype: the
+                # convert only exists because XLA:CPU lacks bf16 dots
+                src_bytes_per_elem = min(
+                    (_DTYPE_BYTES.get(
+                        _SHAPE_RE.search(self.shapes.get(o, "x[]")or"")
+                        .group(1), 4)
+                     for o in prod.operands
+                     if _SHAPE_RE.search(self.shapes.get(o, "") or "")),
+                    default=4)
+                return min(full, elems * src_bytes_per_elem)
+        return full
+
+    def comp_stats(self, comp_name: str, count_bytes: bool = True) -> Stats:
+        key = f"{comp_name}|{count_bytes}"
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Stats()  # break cycles
+        ops = self.comps.get(comp_name, [])
+        st = Stats()
+        for op in ops:
+            st.add(self.op_stats(op, count_bytes))
+        self._memo[key] = st
+        return st
+
+    def _while_parts(self, op: Op) -> tuple[str | None, str | None]:
+        body = cond = None
+        mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+        mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
+        if mb:
+            body = mb.group(1)
+        if mc:
+            cond = mc.group(1)
+        if body is None or cond is None:  # fallback heuristic
+            for c in op.called:
+                ops_c = self.comps.get(c, [])
+                if any(o.opcode == "compare" for o in ops_c) \
+                        and len(ops_c) <= 8 and cond is None:
+                    cond = c
+                elif body is None:
+                    body = c
+        return body, cond
+
+    def op_stats(self, op: Op, count_bytes: bool = True) -> Stats:
+        st = Stats()
+        oc = op.opcode
+        if oc == "while":
+            body, cond = self._while_parts(op)
+            trips = _trip_count(self.comps.get(cond, [])) if cond else 1.0
+            if body:
+                # loop body ops live at real memory granularity
+                st.add(self.comp_stats(body, count_bytes), mult=trips)
+            return st
+        if oc in ("fusion", "call", "conditional"):
+            for c in op.called:
+                if c in self.comps:
+                    # inside a fusion everything is registers/VMEM: count
+                    # flops + collectives only, never bytes
+                    st.add(self.comp_stats(
+                        c, count_bytes and oc != "fusion"))
+        if oc == "dot":
+            st.flops += _dot_flops(op, self.shapes)
+        base = oc.replace("-start", "")
+        if base in COLLECTIVES:
+            _, byts = _shape_elems_bytes(op.type_str)
+            st.coll[base] = st.coll.get(base, 0.0) + byts
+            st.coll_count += 1
+        if self.skip_scopes and any(s in op.raw
+                                    for s in self.skip_scopes):
+            self.skipped_ops += 1
+            return st
+        if count_bytes and oc not in _SKIP_BYTES \
+                and not oc.endswith("-done"):
+            out_b = _shape_elems_bytes(op.type_str)[1]
+            if oc == "fusion":
+                io = self._fusion_io_bytes(op)
+                st.bytes += io
+                if self._fusion_has_major(op):
+                    st.bytes_major += io
+                else:
+                    # pure elementwise chain: on TPU it fuses into its
+                    # producers/consumers; charge one write + one read
+                    st.bytes_major += 2.0 * min(out_b, io)
+            elif oc == "dynamic-slice":
+                # reads only the slice, not the sliced-from buffer
+                st.bytes += 2.0 * out_b
+            elif oc == "dynamic-update-slice":
+                # in-place on TPU (aliased buffer): r/w the update only
+                upd = self._operand_bytes(op.operands[1]) \
+                    if len(op.operands) > 1 else out_b
+                st.bytes += 2.0 * min(out_b, upd)
+            else:
+                in_b = 0.0
+                for o in op.operands:
+                    if o in self.shapes:
+                        in_b += self._operand_bytes(o)
+                st.bytes += out_b + in_b
+                if oc in ("dot", "convolution", "reduce", "sort", "gather",
+                          "scatter", "dynamic-slice",
+                          "dynamic-update-slice") \
+                        or oc.replace("-start", "") in COLLECTIVES:
+                    st.bytes_major += out_b + in_b
+                else:
+                    st.bytes_major += 2.0 * out_b
+        return st
+
+    _MAJOR_IN_FUSION = ("dot", "convolution", "reduce", "sort", "gather",
+                        "scatter")
+
+    def _fusion_has_major(self, op: Op) -> bool:
+        for c in op.called:
+            for o in self.comps.get(c, []):
+                if o.opcode in self._MAJOR_IN_FUSION:
+                    return True
+        return False
+
+    def _fusion_io_bytes(self, op: Op) -> float:
+        """Effective HBM traffic of a fusion:
+
+        * a param consumed only by dynamic-slice/gather reads the slice,
+          not the whole operand (scan-over-layers weight stacks);
+        * a param consumed only by dynamic-update-slice is the *aliased
+          destination buffer* — in-place on TPU, charge the update size;
+        * a dynamic-update-slice anywhere writing the output charges the
+          update, not the whole buffer;
+        * a pure-convert body (bf16↔f32 casts XLA:CPU inserts around
+          dots — TPU has native bf16 MXU) charges the *source-dtype*
+          read only; the cast fuses into the consumer on TPU.
+        """
+        body_name = op.called[0] if op.called else None
+        body = self.comps.get(body_name, []) if body_name else []
+        body_shapes = {o.name: o.type_str for o in body}
+        consumers: dict[str, list[Op]] = {}
+        params: dict[int, Op] = {}
+        dus_ops = [o for o in body if o.opcode == "dynamic-update-slice"]
+        for o in body:
+            if o.opcode == "parameter":
+                m = re.match(r"(\d+)", o.rest)
+                if m:
+                    params[int(m.group(1))] = o
+            for src in o.operands:
+                consumers.setdefault(src, []).append(o)
+
+        _PURE = {"parameter", "constant", "convert", "bitcast", "reshape",
+                 "transpose", "copy", "broadcast", "dynamic-slice"}
+        pure_convert = (body and all(o.opcode in _PURE for o in body)
+                        and any(o.opcode == "convert" for o in body))
+
+        _UNARY = {"convert", "bitcast", "reshape", "copy", "transpose"}
+
+        def final_consumers(name, depth=0) -> list[Op]:
+            """Consumers, walking through pure unary ops (XLA:CPU's
+            bf16↔f32 convert chains sit between params and slices)."""
+            out = []
+            for c in consumers.get(name, []):
+                if c.opcode in _UNARY and depth < 4:
+                    out.extend(final_consumers(c.name, depth + 1))
+                else:
+                    out.append(c)
+            return out
+
+        total = 0.0
+        for i, operand in enumerate(op.operands):
+            full = _shape_elems_bytes(self.shapes.get(operand, ""))[1]
+            pop = params.get(i)
+            if pop is not None:
+                cons = final_consumers(pop.name)
+                if cons and all(c.opcode in ("dynamic-slice", "gather")
+                                for c in cons):
+                    sliced = sum(_shape_elems_bytes(c.type_str)[1]
+                                 for c in cons)
+                    total += min(full, sliced)
+                    continue
+                if cons and all(c.opcode == "dynamic-update-slice"
+                                for c in cons):
+                    # aliased in-place destination: charged via output
+                    continue
+            total += full
+
+        out_b = _shape_elems_bytes(op.type_str)[1]
+        if dus_ops:
+            upd = sum(_shape_elems_bytes(
+                body_shapes.get(o.operands[1], self.shapes.get(
+                    o.operands[1], "")))[1]
+                for o in dus_ops if len(o.operands) >= 2)
+            if upd:
+                out_b = min(out_b, upd)
+        if pure_convert:
+            # source read only; cast output fuses into the consumer on TPU
+            return total
+        return total + out_b
+
+    def entry_stats(self) -> Stats:
+        return self.comp_stats("__entry__")
+
+
+def analyze_hlo(hlo_text: str, skip_scopes: tuple = ()) -> Stats:
+    return Analyzer(hlo_text, skip_scopes).entry_stats()

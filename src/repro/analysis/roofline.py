@@ -1,0 +1,229 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute    = global_FLOPs / (chips · peak_FLOPs)   [s]
+    memory     = global_bytes / (chips · HBM_bw)       [s]
+    collective = per-chip collective bytes / link_bw   [s]
+                 (== global collective bytes / (chips · link_bw), since
+                 post-SPMD HLO shapes are already per-device)
+
+``compiled.cost_analysis()`` on an SPMD executable reports the per-device
+module, so flops/bytes are per-chip; we report both conventions and
+time-per-step directly (time = per-chip work / per-chip peak).
+
+Collective bytes are NOT in cost_analysis — we parse the post-partitioning
+HLO text and sum the output-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op, split by primitive.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one result shape: `bf16[8,128,2048]{2,1,0}` (layout suffix optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|"
+    r"collective-permute)\(")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device bytes by collective primitive from partitioned HLO."""
+    out: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        op = op.replace("-start", "")
+        out[op] += _shape_bytes(shape_str)
+        out["count"] += 1
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: dict = field(default_factory=dict)
+    model_flops: float = 0.0          # 6·N·D (N = active params)
+    peak_bytes_per_chip: float = 0.0  # memory_analysis, if available
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs — remat/waste indicator."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful time at peak / modelled step time (max of terms)."""
+        t_star = self.model_flops / (self.chips * PEAK_FLOPS)
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_star / t if t else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_bytes_per_chip": self.peak_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6·N_active·D for a train step (fwd+bwd)."""
+    n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    return 6.0 * n * tokens
+
+
+def model_flops_decode(cfg, batch: int, context: int) -> float:
+    """2·N_active per token + attention KV reads ≈ 2·N + 2·kv_flops."""
+    n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    # per-token attention score+value FLOPs against the cache
+    kv_flops = 0.0
+    for spec in cfg.all_layer_specs():
+        if spec.mixer == "attn":
+            ctx = min(spec.window, context) if spec.window else context
+            kv_flops += 2 * 2 * cfg.n_heads * cfg.head_dim * ctx
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            kv_flops += 2 * cfg.n_heads * context * (
+                m.kv_lora_rank * 2 + m.qk_rope_dim)
+    return batch * (2.0 * n + kv_flops)
+
+
+def model_flops_prefill(cfg, tokens: int) -> float:
+    n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    return 2.0 * n * tokens
+
+
+def fused_attention_bytes(cfg, shape_cfg, chips: int) -> float:
+    """Analytic per-chip boundary I/O of the flash-attention kernel.
+
+    train/prefill: q, k, v, o tiles in bf16, ×4 passes for training
+    (fwd + remat recompute + bwd reads/writes), ×1 for prefill.
+    decode (flash-decoding): the KV-cache read dominates — per step the
+    kernel streams the whole (window-clamped) cache once."""
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    total = 0.0
+    if shape_cfg.kind == "decode":
+        for spec in cfg.all_layer_specs():
+            if spec.mixer == "attn":
+                ctx = min(spec.window, s) if spec.window else s
+                total += 2 * b * ctx * cfg.kv_dim * 2      # K + V bf16
+            elif spec.mixer == "mla":
+                m = cfg.mla
+                total += b * s * (m.kv_lora_rank + m.qk_rope_dim) * 2
+        return total / chips
+    passes = 4.0 if shape_cfg.kind == "train" else 1.0
+    for spec in cfg.all_layer_specs():
+        if spec.mixer == "attn":
+            q = b * s * cfg.q_dim * 2
+            kv = 2 * b * s * cfg.kv_dim * 2
+            o = b * s * cfg.q_dim * 2
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            q = b * s * cfg.n_heads * (m.qk_nope_dim + m.qk_rope_dim) * 2
+            kv = b * s * cfg.n_heads * (m.qk_nope_dim + m.qk_rope_dim
+                                        + m.v_head_dim) * 2
+            o = b * s * cfg.n_heads * m.v_head_dim * 2
+        else:
+            continue
+        total += (q + kv + o) * passes
+    return total / chips
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
+            chips: int, model_flops: float, skip_scopes: tuple = (),
+            extra_bytes_per_chip: float = 0.0) -> RooflineTerms:
+    # trip-count-aware analysis (XLA's HloCostAnalysis counts while bodies
+    # once — useless for scanned layer stacks; see hlo_stats.py)
+    from repro.analysis.hlo_stats import analyze_hlo
+    hlo = compiled.as_text()
+    st = analyze_hlo(hlo, skip_scopes=skip_scopes)
+    st.bytes += extra_bytes_per_chip
+    st.bytes_major += extra_bytes_per_chip
+    flops = st.flops
+    byts = st.bytes
+    coll = dict(st.coll)
+    coll["count"] = st.coll_count
+    peak_bytes = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak_bytes = float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    total_coll = sum(v for k, v in coll.items() if k != "count")
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        coll_bytes_per_chip=total_coll, coll_breakdown=coll,
+        model_flops=model_flops, peak_bytes_per_chip=peak_bytes)

@@ -1,0 +1,15 @@
+"""The paper's contribution: the LC algorithm as a composable JAX module."""
+from repro.core.algorithm import (
+    LCAlgorithm, LCMetrics, exponential_mu_schedule)
+from repro.core.tasks import (
+    CompressionTask, flatten_params, get_path, set_path)
+from repro.core.views import AsVector, AsIs, AsMatrix, AsStacked
+from repro.core.penalty import lc_penalty, lc_penalty_grad_refs
+from repro.core import schemes
+
+__all__ = [
+    "LCAlgorithm", "LCMetrics", "exponential_mu_schedule",
+    "CompressionTask", "flatten_params", "get_path", "set_path",
+    "AsVector", "AsIs", "AsMatrix", "AsStacked",
+    "lc_penalty", "lc_penalty_grad_refs", "schemes",
+]

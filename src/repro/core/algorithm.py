@@ -1,0 +1,228 @@
+"""The LC algorithm driver (paper Fig. 2).
+
+    w ← argmin_w L(w)                                  (pretrained model)
+    Θ ← Π(w̄)                                           (direct compression)
+    λ ← 0
+    for μ = μ0 < μ1 < … :
+        w ← argmin_w L(w) + μ/2‖w − Δ(Θ) − λ/μ‖²       (L step — user fn)
+        Θ ← argmin_Θ ‖w − λ/μ − Δ(Θ)‖²                 (C step — schemes)
+        λ ← λ − μ(w − Δ(Θ))                            (multipliers)
+        stop when ‖w − Δ(Θ)‖ small
+
+The L step is handed to the user as a *compiled step function + step
+count* (not an opaque Python loop) so the trainer can pjit it, checkpoint
+mid-L-step, and apply fault-tolerance policies. The C step is jitted and
+sharding-preserving; per-task C steps are independent and are dispatched
+together (JAX's async dispatch overlaps them — the paper's "C steps can be
+run in parallel" note).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import state as lcstate
+from repro.core.penalty import lc_penalty
+from repro.core.tasks import CompressionTask, check_disjoint, get_path
+from repro.core.views import AsVector
+
+
+def exponential_mu_schedule(mu0: float, a: float, n_steps: int):
+    """μ_k = μ0·a^k (paper §7: a ∈ [1.1, 1.4])."""
+    return [mu0 * a**k for k in range(n_steps)]
+
+
+@dataclass
+class LCMetrics:
+    step: int
+    mu: float
+    distortion: dict[str, float]      # per task: ‖w − Δ(Θ)‖²
+    penalty: float
+    compression_ratio: float
+
+
+class LCAlgorithm:
+    """Orchestrates L/C/multiplier steps over a params pytree."""
+
+    def __init__(self, tasks: Sequence[CompressionTask],
+                 mu_schedule: Sequence[float],
+                 l_step: Callable | None = None,
+                 eval_fn: Callable | None = None,
+                 jit_c_step: bool = True):
+        self.tasks = list(tasks)
+        self.mu_schedule = list(mu_schedule)
+        self.l_step = l_step
+        self.eval_fn = eval_fn
+        self._c_step = jax.jit(self._c_step_impl) if jit_c_step \
+            else self._c_step_impl
+        self._resolved = False
+
+    # ------------------------------------------------------------------
+    def resolve(self, params):
+        if not self._resolved:
+            resolved = []
+            for t in self.tasks:
+                t = t.resolve(params)
+                if len(t.paths) > 1 and not isinstance(t.view, AsVector):
+                    # single-array views (AsIs/AsMatrix/AsStacked) over a
+                    # multi-leaf selector = one independent task per leaf
+                    # (paper semantics: per-layer compression)
+                    for i, p in enumerate(t.paths):
+                        resolved.append(CompressionTask(
+                            f"{t.name}[{i}]", t.pattern, t.view,
+                            t.scheme, [p]))
+                else:
+                    resolved.append(t)
+            self.tasks = resolved
+            check_disjoint(self.tasks)
+            self._resolved = True
+        return self
+
+    def init(self, params) -> dict:
+        """Θ ← Π(w̄), λ ← 0 (direct compression)."""
+        self.resolve(params)
+        tasks_state = {}
+        for t in self.tasks:
+            leaves = t.leaves(params)
+            x = t.view.to_compressible(leaves)
+            theta = t.scheme_init(x)
+            a_arr = t.scheme_decompress(theta)
+            a_leaves = t.view.from_compressible(a_arr, leaves)
+            a = {p: l.astype(jnp.float32)
+                 for p, l in zip(t.paths, a_leaves)}
+            lam = lcstate.zeros_like_leaves(t.paths, leaves)
+            tasks_state[t.name] = lcstate.task_state(theta, lam, a)
+        return lcstate.lc_state(tasks_state, self.mu_schedule[0], k=0)
+
+    # ------------------------------------------------------------------
+    def _c_step_impl(self, params, lc):
+        mu = lc["mu"]
+        new_tasks = {}
+        for t in self.tasks:
+            ts = lc["tasks"][t.name]
+            leaves = t.leaves(params)
+            shifted = [get_path(params, p).astype(jnp.float32)
+                       - ts["lam"][p] / mu for p in t.paths]
+            x = t.view.to_compressible(
+                [s.astype(l.dtype) for s, l in zip(shifted, leaves)])
+            theta = t.scheme_compress(x, ts["theta"], mu)
+            a_arr = t.scheme_decompress(theta)
+            a_leaves = t.view.from_compressible(a_arr, leaves)
+            a = {p: l.astype(jnp.float32)
+                 for p, l in zip(t.paths, a_leaves)}
+            new_tasks[t.name] = lcstate.task_state(theta, ts["lam"], a)
+        return {"tasks": new_tasks, "mu": mu, "k": lc["k"]}
+
+    def c_step(self, params, lc) -> dict:
+        return self._c_step(params, lc)
+
+    def multiplier_step(self, params, lc) -> dict:
+        """λ ← λ − μ(w − Δ(Θ)) (augmented Lagrangian; skip for QP)."""
+        mu = lc["mu"]
+        new_tasks = {}
+        for t in self.tasks:
+            ts = lc["tasks"][t.name]
+            lam = {p: ts["lam"][p]
+                   - mu * (get_path(params, p).astype(jnp.float32)
+                           - ts["a"][p])
+                   for p in t.paths}
+            new_tasks[t.name] = lcstate.task_state(ts["theta"], lam, ts["a"])
+        return {"tasks": new_tasks, "mu": mu, "k": lc["k"]}
+
+    def set_mu(self, lc, mu: float, k: int) -> dict:
+        return {"tasks": lc["tasks"], "mu": jnp.float32(mu),
+                "k": jnp.int32(k)}
+
+    # ------------------------------------------------------------------
+    def penalty(self, params, lc) -> jnp.ndarray:
+        return lc_penalty(params, lc, self.tasks)
+
+    def distortion(self, params, lc) -> dict[str, jnp.ndarray]:
+        """‖w − Δ(Θ)‖² per task — must decrease across C steps (§7)."""
+        out = {}
+        for t in self.tasks:
+            ts = lc["tasks"][t.name]
+            d = jnp.float32(0.0)
+            for p in t.paths:
+                diff = get_path(params, p).astype(jnp.float32) - ts["a"][p]
+                d = d + jnp.sum(diff * diff)
+            out[t.name] = d
+        return out
+
+    def constraint_violation(self, params, lc) -> jnp.ndarray:
+        """‖w − Δ(Θ)‖ over all tasks — the convergence monitor."""
+        total = jnp.float32(0.0)
+        for v in self.distortion(params, lc).values():
+            total = total + v
+        return jnp.sqrt(total)
+
+    def compression_ratio(self, params, lc, float_bits: int = 32) -> float:
+        """(uncompressed bits of compressed params) / (Θ bits)."""
+        orig_bits = 0.0
+        comp_bits = 0.0
+        for t in self.tasks:
+            ts = lc["tasks"][t.name]
+            for p in t.paths:
+                orig_bits += get_path(params, p).size * float_bits
+            theta = ts["theta"]
+            if t.view.stacked:
+                n = jax.tree_util.tree_leaves(theta)[0].shape[0]
+                item = jax.tree_util.tree_map(lambda x: x[0], theta)
+                comp_bits += n * float(t.scheme.bits(item, float_bits))
+            else:
+                comp_bits += float(t.scheme.bits(theta, float_bits))
+        return orig_bits / max(comp_bits, 1.0)
+
+    def apply_compression(self, params):
+        """w ← Δ(Θ) applied into the params pytree — the final compressed
+        model (call after the LC loop; uses the latest C step of w)."""
+        lc = self._last_lc
+        out = params
+        from repro.core.tasks import set_path
+        for t in self.tasks:
+            ts = lc["tasks"][t.name]
+            for p in t.paths:
+                leaf = get_path(params, p)
+                out = set_path(out, p, ts["a"][p].astype(leaf.dtype))
+        return out
+
+    # ------------------------------------------------------------------
+    def run(self, train_state, params_of: Callable, tol: float = 0.0,
+            callbacks: Sequence[Callable] = ()):
+        """Full LC loop (paper Fig. 2 / Listing 1).
+
+        ``train_state`` is opaque to LC except through ``params_of``.
+        ``self.l_step(train_state, lc, step) -> train_state`` runs one full
+        L step (the user decides epochs/steps inside, as in the paper).
+        """
+        assert self.l_step is not None, "provide l_step to run()"
+        params = params_of(train_state)
+        lc = self.init(params)
+        self._last_lc = lc
+        history = []
+        for k, mu in enumerate(self.mu_schedule):
+            lc = self.set_mu(lc, mu, k)
+            train_state = self.l_step(train_state, lc, k)
+            params = params_of(train_state)
+            lc = self.c_step(params, lc)
+            lc = self.multiplier_step(params, lc)
+            self._last_lc = lc
+            m = LCMetrics(
+                step=k, mu=float(mu),
+                distortion={n: float(v) for n, v in
+                            self.distortion(params, lc).items()},
+                penalty=float(self.penalty(params, lc)),
+                compression_ratio=float(
+                    self.compression_ratio(params, lc)),
+            )
+            history.append(m)
+            for cb in callbacks:
+                cb(train_state, lc, m)
+            if tol > 0 and float(
+                    self.constraint_violation(params, lc)) < tol:
+                break
+        return train_state, lc, history

@@ -1,0 +1,35 @@
+"""The LC quadratic penalty used inside the compiled L step.
+
+    P(w; a, λ, μ) = Σ_leaves  μ/2 · ‖w − a − λ/μ‖²,   a = Δ(Θ)
+
+Gradient wrt w is μ(w − a) − λ. Because ``a`` and ``λ`` are per-leaf and
+share the leaf's sharding, this term adds zero collectives to the L step.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.tasks import get_path
+
+
+def lc_penalty(params, lc_state, tasks) -> jnp.ndarray:
+    """Total penalty over all compression tasks (f32 scalar)."""
+    mu = lc_state["mu"]
+    total = jnp.float32(0.0)
+    for t in tasks:
+        ts = lc_state["tasks"][t.name]
+        for p in t.paths:
+            w = get_path(params, p).astype(jnp.float32)
+            d = w - ts["a"][p] - ts["lam"][p] / mu
+            total = total + 0.5 * mu * jnp.sum(d * d)
+    return total
+
+
+def lc_penalty_grad_refs(lc_state, tasks):
+    """(a, λ) pytrees keyed by param path — convenience for custom L steps."""
+    refs = {}
+    for t in tasks:
+        ts = lc_state["tasks"][t.name]
+        for p in t.paths:
+            refs[p] = (ts["a"][p], ts["lam"][p])
+    return refs

@@ -1,0 +1,19 @@
+from repro.core.schemes.base import CompressionScheme
+from repro.core.schemes.quantize import (
+    AdaptiveQuantization, Binarize, Ternarize, kmeans_1d, quantile_init,
+    optimal_codebook_dp)
+from repro.core.schemes.prune import (
+    ConstraintL0Pruning, ConstraintL1Pruning, PenaltyL0Pruning,
+    PenaltyL1Pruning, topk_magnitude_mask, project_l1_ball)
+from repro.core.schemes.lowrank import (
+    LowRank, RankSelection, randomized_svd, exact_svd)
+from repro.core.schemes.additive import AdditiveCombination
+
+__all__ = [
+    "CompressionScheme", "AdaptiveQuantization", "Binarize", "Ternarize",
+    "kmeans_1d", "quantile_init", "optimal_codebook_dp",
+    "ConstraintL0Pruning", "ConstraintL1Pruning", "PenaltyL0Pruning",
+    "PenaltyL1Pruning", "topk_magnitude_mask", "project_l1_ball",
+    "LowRank", "RankSelection", "randomized_svd", "exact_svd",
+    "AdditiveCombination",
+]

@@ -1,0 +1,83 @@
+"""Additive combinations of compressions (paper §4, Table 1 bottom).
+
+Δ(Θ₁,…,Θ_S) = Σ_s Δ_s(Θ_s); the C step
+    min ‖w − Σ_s Δ_s(Θ_s)‖²
+is solved by alternating projections: each sub-scheme projects the current
+residual, which monotonically decreases the joint distortion (each inner
+step is an exact partial minimization).
+
+Sub-schemes may live in different domains: vector-domain sub-schemes see
+the flattened residual, matrix-domain ones see it reshaped — the view
+passes the original (matrix) shape when any sub-scheme needs it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.schemes.base import CompressionScheme
+
+
+class AdditiveCombination(CompressionScheme):
+    def __init__(self, schemes: list[CompressionScheme], iters: int = 3):
+        assert len(schemes) >= 2
+        self.schemes = list(schemes)
+        self.iters = int(iters)
+        # domain: "matrix" if any sub-scheme needs matrices, else "vector"
+        self.domain = ("matrix" if any(s.domain == "matrix" for s in schemes)
+                       else "vector")
+
+    def _to_domain(self, x, scheme):
+        if scheme.domain == "vector" and x.ndim != 1:
+            return x.ravel()
+        return x
+
+    def _from_domain(self, x, shape):
+        return x.reshape(shape)
+
+    def init(self, w, key=None):
+        thetas = []
+        resid = w
+        for s in self.schemes:
+            th = s.init(self._to_domain(resid, s), key=key)
+            thetas.append(th)
+            resid = resid - self._from_domain(
+                s.decompress(th), w.shape)
+        return {"parts": thetas}
+
+    def compress(self, w, theta, mu=None):
+        thetas = list(theta["parts"])
+        for _ in range(self.iters):
+            for i, s in enumerate(self.schemes):
+                others = sum(
+                    (self._from_domain(self.schemes[j].decompress(thetas[j]),
+                                       w.shape)
+                     for j in range(len(self.schemes)) if j != i),
+                    jnp.zeros_like(w))
+                resid = w - others
+                try:
+                    thetas[i] = s.compress(self._to_domain(resid, s),
+                                           thetas[i], mu=mu)
+                except TypeError:
+                    thetas[i] = s.compress(self._to_domain(resid, s),
+                                           thetas[i])
+        return {"parts": thetas}
+
+    def decompress(self, theta):
+        parts = theta["parts"]
+        out = None
+        shape = None
+        # decompress in matrix domain if available, else vector
+        for s, th in zip(self.schemes, parts):
+            d = s.decompress(th)
+            if d.ndim > 1:
+                shape = d.shape
+        for s, th in zip(self.schemes, parts):
+            d = s.decompress(th)
+            if shape is not None:
+                d = d.reshape(shape)
+            out = d if out is None else out + d
+        return out
+
+    def bits(self, theta, float_bits: int = 32):
+        return sum(s.bits(th, float_bits)
+                   for s, th in zip(self.schemes, theta["parts"]))

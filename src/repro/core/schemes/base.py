@@ -1,0 +1,71 @@
+"""Base class for C-step compression schemes.
+
+A scheme operates on a *compressible array* produced by a view
+(`core.views`): either a 1-D vector, a single 2-D matrix, or a stack of
+matrices ``(L, m, n)`` / vectors ``(L, p)`` (the scheme is vmapped over the
+leading axis by the view machinery when ``per_item=True``).
+
+Every method is jit-compatible and sharding-preserving: schemes receive
+jnp arrays (possibly sharded), return pytrees of jnp arrays, and use only
+``jnp`` / ``lax`` ops so GSPMD can partition the C step.
+
+The key contract (paper §3):
+    decompress(compress(w, theta_prev)) is the L2 projection of ``w`` onto
+    the scheme's feasible set — distortion ``‖w − Δ(Θ)‖²`` must never
+    increase across C steps (paper §7 "practical advice" monitors this; our
+    tests enforce it).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+Theta = Any  # scheme-specific pytree
+
+
+class CompressionScheme:
+    """Abstract C step: Π(w) = argmin_Θ ‖w − Δ(Θ)‖²."""
+
+    #: "vector" | "matrix" — what the view must produce.
+    domain: str = "vector"
+
+    def init(self, w: jnp.ndarray, key=None) -> Theta:
+        """Direct compression Θ^DC = Π(w) used to initialize the LC loop."""
+        raise NotImplementedError
+
+    def compress(self, w: jnp.ndarray, theta: Theta, mu=None) -> Theta:
+        """One C step, warm-started at the previous Θ.
+
+        ``mu`` is the current penalty parameter — only penalty-form schemes
+        (ℓ0/ℓ1 penalties, rank selection) use it; projection-form schemes
+        ignore it.
+        """
+        raise NotImplementedError
+
+    def decompress(self, theta: Theta) -> jnp.ndarray:
+        """Δ(Θ) → dense array with the view's compressible shape."""
+        raise NotImplementedError
+
+    def bits(self, theta: Theta, float_bits: int = 32) -> float:
+        """Storage cost of Θ in bits (for compression-ratio accounting)."""
+        raise NotImplementedError
+
+    def flops(self, theta: Theta, orig_shape: tuple[int, ...]) -> float:
+        """Inference FLOPs of a matmul against the compressed form.
+
+        Defaults to the dense cost; low-rank/pruning override.
+        ``orig_shape`` is the (m, n) of the uncompressed matrix.
+        """
+        m, n = orig_shape[-2], orig_shape[-1]
+        return 2.0 * m * n
+
+    # ------------------------------------------------------------------
+    def distortion(self, w: jnp.ndarray, theta: Theta) -> jnp.ndarray:
+        """‖w − Δ(Θ)‖² — the C-step objective, used by monitors/tests."""
+        d = w - self.decompress(theta)
+        return jnp.sum(d.astype(jnp.float32) ** 2)
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__

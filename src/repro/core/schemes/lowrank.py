@@ -1,0 +1,147 @@
+"""Low-rank C steps (paper §4.3).
+
+``LowRank(r)`` — truncated SVD to a fixed target rank.
+``RankSelection(alpha, cost=...)`` — automatic per-matrix rank (Idelbayev &
+Carreira-Perpiñán, CVPR'20 [17]): the C step minimizes
+    λ·α·C(r) + μ/2·Σ_{i>r} σ_i²   over r ∈ {0..R},
+with C(r) = r·(m+n) (storage floats) or C(r) = r·(m+n) MAC-scaled (FLOPs).
+Because the selected rank changes across C steps, Θ keeps fixed shapes
+(U: (m,R), V: (n,R)) plus an integer rank; columns ≥ r are masked to zero —
+this keeps every C step jit-compatible on TPU.
+
+For large matrices a randomized range finder (Halko et al.) replaces the
+exact SVD: the only O(m·n·R) work is two tall matmuls, which GSPMD shards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes.base import CompressionScheme
+
+
+def randomized_svd(w: jnp.ndarray, r: int, key: jax.Array,
+                   oversample: int = 8, power_iters: int = 2):
+    """Rank-r randomized SVD. Returns (U (m,r), s (r,), V (n,r))."""
+    m, n = w.shape
+    k = min(r + oversample, min(m, n))
+    omega = jax.random.normal(key, (n, k), dtype=jnp.float32)
+    y = w.astype(jnp.float32) @ omega
+    for _ in range(power_iters):
+        y, _ = jnp.linalg.qr(y)
+        y = w.astype(jnp.float32) @ (w.astype(jnp.float32).T @ y)
+    q, _ = jnp.linalg.qr(y)                      # (m, k)
+    b = q.T @ w.astype(jnp.float32)              # (k, n)
+    ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    u = q @ ub
+    return u[:, :r], s[:r], vt[:r, :].T
+
+
+def exact_svd(w: jnp.ndarray):
+    u, s, vt = jnp.linalg.svd(w.astype(jnp.float32), full_matrices=False)
+    return u, s, vt.T
+
+
+class LowRank(CompressionScheme):
+    """W ≈ U Vᵀ with fixed target rank (Θ = (U√s, V√s))."""
+
+    domain = "matrix"
+
+    def __init__(self, target_rank: int, randomized: str = "auto"):
+        assert target_rank >= 1
+        self.rank = int(target_rank)
+        self.randomized = randomized
+
+    def _use_rsvd(self, shape):
+        if self.randomized == "auto":
+            return min(shape) > 2048
+        return bool(self.randomized)
+
+    def _svd(self, w):
+        if self._use_rsvd(w.shape):
+            key = jax.random.PRNGKey(w.shape[0] * 7919 + w.shape[1])
+            return randomized_svd(w, self.rank, key)
+        u, s, v = exact_svd(w)
+        return u[:, :self.rank], s[:self.rank], v[:, :self.rank]
+
+    def init(self, w, key=None):
+        return self.compress(w, None)
+
+    def compress(self, w, theta, mu=None):
+        u, s, v = self._svd(w)
+        rs = jnp.sqrt(s)
+        return {"u": u * rs[None, :], "v": v * rs[None, :]}
+
+    def decompress(self, theta):
+        return theta["u"] @ theta["v"].T
+
+    def bits(self, theta, float_bits: int = 32):
+        return (theta["u"].size + theta["v"].size) * float_bits
+
+    def flops(self, theta, orig_shape):
+        m, n = orig_shape[-2], orig_shape[-1]
+        return 2.0 * self.rank * (m + n)
+
+
+class RankSelection(CompressionScheme):
+    """Automatic rank selection per matrix (λ-weighted cost vs distortion).
+
+    ``alpha`` is the paper's λ·α_l product for this matrix: the price (in
+    distortion units, scaled by 2/μ internally) of one unit of C(r).
+    """
+
+    domain = "matrix"
+
+    def __init__(self, alpha: float, cost: str = "storage",
+                 max_rank: int | None = None):
+        assert cost in ("storage", "flops")
+        self.alpha = float(alpha)
+        self.cost = cost
+        self.max_rank = max_rank
+
+    def _rmax(self, shape):
+        r = min(shape)
+        return min(self.max_rank, r) if self.max_rank else r
+
+    def _unit_cost(self, shape):
+        m, n = shape
+        if self.cost == "storage":
+            return float(m + n)          # floats per unit rank
+        return 2.0 * float(m + n)        # MACs per unit rank per example
+
+    def init(self, w, key=None):
+        return self.compress(w, None, mu=1e-6)
+
+    def compress(self, w, theta, mu=None):
+        assert mu is not None, "rank selection needs μ"
+        m, n = w.shape
+        rmax = self._rmax((m, n))
+        u, s, v = exact_svd(w)
+        u, s, v = u[:, :rmax], s[:rmax], v[:, :rmax]
+        # tail energy: E(r) = Σ_{i>r} σ_i², r = 0..rmax
+        s2 = s.astype(jnp.float32) ** 2
+        tail = jnp.concatenate([jnp.cumsum(s2[::-1])[::-1],
+                                jnp.zeros((1,), jnp.float32)])  # (rmax+1,)
+        ranks = jnp.arange(rmax + 1, dtype=jnp.float32)
+        total = self.alpha * self._unit_cost((m, n)) * ranks \
+            + 0.5 * mu * tail
+        r_star = jnp.argmin(total).astype(jnp.int32)
+        mask = (jnp.arange(rmax) < r_star).astype(jnp.float32)
+        rs = jnp.sqrt(s * mask)
+        return {"u": u * rs[None, :], "v": v * rs[None, :], "rank": r_star}
+
+    def decompress(self, theta):
+        return theta["u"] @ theta["v"].T
+
+    def bits(self, theta, float_bits: int = 32):
+        m = theta["u"].shape[0]
+        n = theta["v"].shape[0]
+        # data-dependent; report with selected rank
+        return float((m + n) * float_bits)  # per unit rank; see rank()
+
+    def rank(self, theta) -> jnp.ndarray:
+        return theta["rank"]
+
+    def flops(self, theta, orig_shape):
+        m, n = orig_shape[-2], orig_shape[-1]
+        return 2.0 * float(theta["rank"]) * (m + n)

@@ -1,0 +1,32 @@
+"""LC state pytrees.
+
+``LCState`` travels with the train state through jit boundaries and
+checkpoints:
+
+    {"tasks": {task_name: {"theta": <scheme pytree>,
+                           "lam":   {param_path: array},   # multipliers
+                           "a":     {param_path: array}}}, # a = Δ(Θ) scattered
+     "mu": f32 scalar,
+     "k":  i32 LC-step counter}
+
+``a`` (the decompressed target) and ``lam`` are stored *per original
+parameter leaf* — because the L2 penalty separates over leaves, the L step
+never materializes the concatenated view, and both arrays inherit the
+parameter's sharding.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def task_state(theta, lam: dict, a: dict) -> dict:
+    return {"theta": theta, "lam": lam, "a": a}
+
+
+def lc_state(tasks: dict, mu: float, k: int = 0) -> dict:
+    return {"tasks": tasks, "mu": jnp.float32(mu), "k": jnp.int32(k)}
+
+
+def zeros_like_leaves(paths: list[str], leaves: list) -> dict:
+    return {p: jnp.zeros(l.shape, jnp.float32)
+            for p, l in zip(paths, leaves)}

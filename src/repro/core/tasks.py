@@ -1,0 +1,110 @@
+"""Compression tasks: (parameter selector) → (view, scheme).
+
+The paper's ``compression_tasks`` dict maps ``Param(...)`` objects to
+``(view, compression)`` pairs. Here parameters live in a nested-dict
+pytree, so the selector is a regex over slash-joined paths — this survives
+scanned layer stacks (a stacked param is one leaf, compressed per-item via
+``AsStacked``) and works identically on sharded arrays.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+
+from repro.core.schemes.base import CompressionScheme
+from repro.core.views import View
+
+
+def flatten_params(params) -> dict[str, Any]:
+    """Nested dict pytree → {'a/b/c': leaf} with deterministic order."""
+    flat = {}
+
+    def rec(node, prefix):
+        if isinstance(node, dict):
+            for k in sorted(node.keys()):
+                rec(node[k], f"{prefix}/{k}" if prefix else str(k))
+        else:
+            flat[prefix] = node
+
+    rec(params, "")
+    return flat
+
+
+def set_path(params, path: str, value):
+    """Functionally set a slash path in a nested dict pytree."""
+    keys = path.split("/")
+    node = dict(params)
+    cursor = node
+    for k in keys[:-1]:
+        cursor[k] = dict(cursor[k])
+        cursor = cursor[k]
+    cursor[keys[-1]] = value
+    return node
+
+
+def get_path(params, path: str):
+    node = params
+    for k in path.split("/"):
+        node = node[k]
+    return node
+
+
+@dataclass
+class CompressionTask:
+    """One entry of the compression-tasks structure."""
+
+    name: str
+    pattern: str                      # regex matched with re.search on paths
+    view: View
+    scheme: CompressionScheme
+    # resolved lazily against a concrete params pytree:
+    paths: list[str] = field(default_factory=list)
+
+    def resolve(self, params) -> "CompressionTask":
+        flat = flatten_params(params)
+        rx = re.compile(self.pattern)
+        paths = [p for p in flat if rx.search(p)]
+        if not paths:
+            raise ValueError(
+                f"task {self.name!r}: pattern {self.pattern!r} matched no "
+                f"parameters; available: {sorted(flat)[:20]}...")
+        return CompressionTask(self.name, self.pattern, self.view,
+                               self.scheme, paths)
+
+    def leaves(self, params) -> list:
+        return [get_path(params, p) for p in self.paths]
+
+    # ---- scheme application, vmapped when the view is stacked ----------
+    def scheme_init(self, x):
+        if self.view.stacked:
+            return jax.vmap(lambda xi: self.scheme.init(xi))(x)
+        return self.scheme.init(x)
+
+    def scheme_compress(self, x, theta, mu):
+        if self.view.stacked:
+            return jax.vmap(
+                lambda xi, ti: self.scheme.compress(xi, ti, mu=mu))(x, theta)
+        return self.scheme.compress(x, theta, mu=mu)
+
+    def scheme_decompress(self, theta):
+        if self.view.stacked:
+            return jax.vmap(self.scheme.decompress)(theta)
+        return self.scheme.decompress(theta)
+
+
+def check_disjoint(tasks: list[CompressionTask]):
+    """Each parameter may belong to at most one task (paper semantics:
+    additive multi-scheme compression of the same params is expressed as a
+    single AdditiveCombination task, not two overlapping tasks)."""
+    seen: dict[str, str] = {}
+    for t in tasks:
+        for p in t.paths:
+            if p in seen:
+                raise ValueError(
+                    f"parameter {p} claimed by tasks {seen[p]!r} and "
+                    f"{t.name!r}; use AdditiveCombination for multi-scheme")
+            seen[p] = t.name
+    return True

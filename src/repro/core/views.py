@@ -1,0 +1,91 @@
+"""Compression views (paper §5, "compression tasks").
+
+A view adapts a subset of model parameters to the array domain a scheme
+expects, and scatters the decompressed result back:
+
+* ``AsVector``  — flatten + concatenate all selected leaves into one 1-D
+  vector (e.g. one codebook shared across several layers).
+* ``AsIs``      — a single 2-D leaf used directly as a matrix.
+* ``AsMatrix``  — a single leaf reshaped to 2-D (merge all but last dim).
+* ``AsStacked`` — a single leaf with a leading stack axis (scanned layer
+  stacks ``(L, ...)`` or expert stacks ``(E, ...)``); the scheme is vmapped
+  over axis 0, giving per-layer/per-expert codebooks, ranks, or supports.
+  ``domain`` controls whether each item is flattened ("vector") or
+  reshaped to a matrix ("matrix").
+
+Views are pure reshaping: ``from_compressible(to_compressible(x)) == x``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class View:
+    #: whether the compressible array carries a leading vmapped stack axis
+    stacked: bool = False
+
+    def to_compressible(self, leaves: list[jnp.ndarray]) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def from_compressible(self, arr: jnp.ndarray,
+                          templates: list) -> list[jnp.ndarray]:
+        raise NotImplementedError
+
+
+class AsVector(View):
+    def to_compressible(self, leaves):
+        return jnp.concatenate([l.ravel().astype(jnp.float32)
+                                for l in leaves])
+
+    def from_compressible(self, arr, templates):
+        sizes = [int(np.prod(t.shape)) for t in templates]
+        offs = np.cumsum([0] + sizes)
+        return [arr[offs[i]:offs[i + 1]].reshape(templates[i].shape)
+                .astype(templates[i].dtype)
+                for i in range(len(templates))]
+
+
+class AsIs(View):
+    def to_compressible(self, leaves):
+        assert len(leaves) == 1, "AsIs views exactly one parameter"
+        (l,) = leaves
+        assert l.ndim == 2, f"AsIs needs a 2-D matrix, got {l.shape}"
+        return l.astype(jnp.float32)
+
+    def from_compressible(self, arr, templates):
+        return [arr.reshape(templates[0].shape).astype(templates[0].dtype)]
+
+
+class AsMatrix(View):
+    """Reshape one leaf to (prod(leading dims), last dim)."""
+
+    def to_compressible(self, leaves):
+        assert len(leaves) == 1, "AsMatrix views exactly one parameter"
+        (l,) = leaves
+        return l.reshape(-1, l.shape[-1]).astype(jnp.float32)
+
+    def from_compressible(self, arr, templates):
+        return [arr.reshape(templates[0].shape).astype(templates[0].dtype)]
+
+
+class AsStacked(View):
+    """Leading axis = stack (layers/experts); scheme is vmapped over it."""
+
+    stacked = True
+
+    def __init__(self, domain: str = "vector"):
+        assert domain in ("vector", "matrix")
+        self.domain = domain
+
+    def to_compressible(self, leaves):
+        assert len(leaves) == 1, "AsStacked views exactly one parameter"
+        (l,) = leaves
+        assert l.ndim >= 2
+        n = l.shape[0]
+        if self.domain == "vector":
+            return l.reshape(n, -1).astype(jnp.float32)
+        return l.reshape(n, -1, l.shape[-1]).astype(jnp.float32)
+
+    def from_compressible(self, arr, templates):
+        return [arr.reshape(templates[0].shape).astype(templates[0].dtype)]

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (
+    TokenStream, embedding_stream, gaussian_blobs, teacher_classification)
+
+__all__ = ["TokenStream", "embedding_stream", "gaussian_blobs",
+           "teacher_classification"]

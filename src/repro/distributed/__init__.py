@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES, active_mesh, batch_axes, constrain, resolve_spec,
+    tree_shardings, use_mesh)
+
+__all__ = [
+    "DEFAULT_RULES", "active_mesh", "batch_axes", "constrain",
+    "resolve_spec", "tree_shardings", "use_mesh",
+]

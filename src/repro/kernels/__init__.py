@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's hot spots: the k-means C step, the
+codebook-dequant serving GEMM, and threshold-bisection pruning. Each
+subpackage ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with CPU fallback), ref.py (pure-jnp oracle)."""

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import attention
+
+__all__ = ["attention"]

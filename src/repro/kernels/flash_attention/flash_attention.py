@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused flash attention (fwd), GQA-native.
+
+The training/prefill memory bottleneck of every assigned arch is the
+(qc × kc) attention score tile materializing in HBM (EXPERIMENTS.md
+§Roofline). This kernel keeps the whole online-softmax loop in VMEM:
+
+* grid (B, KV, G, nq, nk), nk innermost (sequential on TPU);
+* the K/V BlockSpec index_map **ignores the g axis** — grouped query
+  heads reuse the same VMEM-resident K/V tile with zero extra HBM
+  traffic (the GQA-native alternative to materializing repeated KV);
+* running (m, l) live in VMEM scratch; the output block is revisited
+  across nk steps and rescaled in place; division by l happens on the
+  last step;
+* causal/sliding-window masking from absolute positions via iota —
+  no mask tensor is ever formed.
+
+HBM traffic = q + k + v + o exactly (the boundary I/O the dry-run's
+fused-scope accounting charges).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            scale: float, window: int, qc: int, kc: int, nk: int):
+    iq = pl.program_id(3)
+    ik = pl.program_id(4)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)            # (qc, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (kc, D)
+    v = v_ref[0, 0].astype(jnp.float32)               # (kc, D)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (qc, kc)
+    qpos = iq * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    kpos = ik * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    acc = o_ref[0, 0, 0] * alpha[:, None]
+    acc = acc + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, 0, 0] = acc
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0, 0] = o_ref[0, 0, 0] / jnp.maximum(
+            l_ref[...], 1e-30)[:, None]
+
+
+@partial(jax.jit,
+         static_argnames=("window", "q_chunk", "kv_chunk", "interpret"))
+def flash_attention(q, k, v, *, window: int = 0, q_chunk: int = 128,
+                    kv_chunk: int = 128, interpret: bool = True):
+    """q: (B, KV, G, S, D); k, v: (B, KV, S, D) → (B, KV, G, S, D) f32."""
+    b, kvh, g, s, d = q.shape
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, s)
+    assert s % qc == 0 and s % kc == 0
+    nq, nk = s // qc, s // kc
+    scale = 1.0 / np.sqrt(d)
+
+    return pl.pallas_call(
+        partial(_kernel, scale=scale, window=window, qc=qc, kc=kc, nk=nk),
+        grid=(b, kvh, g, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, qc, d),
+                         lambda b_, k_, g_, iq, ik: (b_, k_, g_, iq, 0)),
+            # K/V index_map ignores g: grouped heads share the VMEM tile
+            pl.BlockSpec((1, 1, kc, d),
+                         lambda b_, k_, g_, iq, ik: (b_, k_, ik, 0)),
+            pl.BlockSpec((1, 1, kc, d),
+                         lambda b_, k_, g_, iq, ik: (b_, k_, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, qc, d),
+            lambda b_, k_, g_, iq, ik: (b_, k_, g_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, s, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((qc,), jnp.float32),   # running max m
+            pltpu.VMEM((qc,), jnp.float32),   # running sum l
+        ],
+        interpret=interpret,
+    )(q, k, v)

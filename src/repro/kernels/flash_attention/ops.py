@@ -1,0 +1,32 @@
+"""Wrapper: model-layout (B, S, H, D) GQA attention on the flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, window: int = 0, q_chunk: int = 128,
+              kv_chunk: int = 128, use_pallas: bool | str = "auto"):
+    """q: (B, S, H, D); k, v: (B, S, KV, D) → (B, S, H, D)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = jnp.moveaxis(q.reshape(b, s, kvh, g, d), 1, 3)   # (B,KV,G,S,D)
+    kg = jnp.moveaxis(k, 1, 2)                            # (B,KV,S,D)
+    vg = jnp.moveaxis(v, 1, 2)
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if use_pallas:
+        out = flash_attention(qg, kg, vg, window=window,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              interpret=not _on_tpu())
+    else:
+        out = ref.flash_attention_ref(qg, kg, vg, window=window)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, d).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel (causal + window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, window: int = 0):
+    """q: (B, KV, G, Sq, D); k, v: (B, KV, Sk, D) → (B, KV, G, Sq, D).
+
+    Causal over absolute positions (Sq == Sk)."""
+    sq, sk = q.shape[3], k.shape[2]
+    d = q.shape[-1]
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqc,bkcd->bkgqd", p,
+                      v.astype(jnp.float32))

@@ -1,0 +1,3 @@
+from repro.kernels.kmeans.ops import assign_moments, kmeans, lloyd_step
+
+__all__ = ["assign_moments", "kmeans", "lloyd_step"]

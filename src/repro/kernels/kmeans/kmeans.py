@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused k-means assignment + cluster moments.
+
+The adaptive-quantization C step (paper §4.1) assigns every weight to its
+nearest codebook entry and accumulates per-cluster Σw / counts. On GPU
+this is a gather + atomicAdd pattern; the TPU-native shape is:
+
+* weights stream HBM→VMEM in (ROWS, 128) tiles (lane dim = 128);
+* the codebook (K ≤ 256 f32) stays VMEM-resident across the whole grid
+  (BlockSpec index_map pins block (0,) for every grid step);
+* distance/argmin run on the VPU via broadcast-subtract-square over the
+  K axis (K is small — the (r, 128, K) intermediate fits VMEM);
+* cluster moments use **grid-sequential accumulation** into the output
+  ref — TPU Pallas grids execute sequentially per core, which replaces
+  CUDA atomics (`@pl.when(step == 0)` zero-init, then `+=`).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8           # sublane tile rows
+LANES = 128        # TPU lane width
+
+
+def _kernel(w_ref, cb_ref, assign_ref, sums_ref, counts_ref, *, k: int):
+    step = pl.program_id(0)
+    w = w_ref[...]                                    # (ROWS, LANES) f32
+    cb = cb_ref[...]                                  # (1, K) f32
+    d = (w[:, :, None] - cb[0][None, None, :]) ** 2   # (ROWS, LANES, K)
+    assign = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    assign_ref[...] = assign
+    onehot = (assign[:, :, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2))
+    onehot = onehot.astype(jnp.float32)
+    part_sums = jnp.sum(w[:, :, None] * onehot, axis=(0, 1))[None, :]
+    part_counts = jnp.sum(onehot, axis=(0, 1))[None, :]
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = part_sums
+        counts_ref[...] = part_counts
+
+    @pl.when(step != 0)
+    def _accum():
+        sums_ref[...] += part_sums
+        counts_ref[...] += part_counts
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def kmeans_assign_moments(w: jnp.ndarray, codebook: jnp.ndarray,
+                          interpret: bool = True):
+    """w: (P,) f32 (P % (ROWS·LANES) == 0 after ops.py padding);
+    codebook: (K,) f32 → (assign (P,) i32, sums (K,), counts (K,))."""
+    p = w.shape[0]
+    k = codebook.shape[0]
+    tile = ROWS * LANES
+    assert p % tile == 0, f"pad to a multiple of {tile} in ops.py"
+    n_tiles = p // tile
+    w2 = w.astype(jnp.float32).reshape(n_tiles * ROWS, LANES)
+    cb2 = codebook.astype(jnp.float32).reshape(1, k)
+
+    assign2, sums2, counts2 = pl.pallas_call(
+        partial(_kernel, k=k),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),   # pinned in VMEM
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),   # sequential accum
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles * ROWS, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w2, cb2)
+    return assign2.reshape(p), sums2[0], counts2[0]

@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the k-means C-step kernel.
+
+``use_pallas="auto"`` runs the Pallas kernel in interpret mode on CPU
+(for validation) and compiled on TPU; the jnp reference path produces
+identical results and is what the GSPMD-sharded C step uses when the
+weight vector is distributed (the kernel is a per-shard building block).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans import ref
+from repro.kernels.kmeans.kmeans import LANES, ROWS, kmeans_assign_moments
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def assign_moments(w: jnp.ndarray, codebook: jnp.ndarray,
+                   use_pallas: bool | str = "auto"):
+    """Nearest-centroid assignment + cluster moments; pads internally."""
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.kmeans_assign_moments_ref(w, codebook)
+    p = w.shape[0]
+    tile = ROWS * LANES
+    pad = (-p) % tile
+    if pad:
+        # pad with +inf-distance sentinel: clone of codebook[0] so padded
+        # elements land in cluster 0; subtract them from the moments after
+        wp = jnp.concatenate([w, jnp.full((pad,), codebook[0], w.dtype)])
+    else:
+        wp = w
+    assign, sums, counts = kmeans_assign_moments(
+        wp, codebook, interpret=not _on_tpu())
+    if pad:
+        sums = sums.at[0].add(-float(pad) * codebook[0])
+        counts = counts.at[0].add(-float(pad))
+        assign = assign[:p]
+    return assign, sums, counts
+
+
+def lloyd_step(w: jnp.ndarray, codebook: jnp.ndarray,
+               use_pallas: bool | str = "auto") -> jnp.ndarray:
+    _, sums, counts = assign_moments(w, codebook, use_pallas)
+    new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), codebook)
+    return jnp.sort(new)
+
+
+def kmeans(w: jnp.ndarray, codebook0: jnp.ndarray, iters: int = 25,
+           use_pallas: bool | str = "auto"):
+    """Full Lloyd loop on the kernel; returns (codebook, assignments)."""
+    cb = jnp.sort(codebook0)
+    for _ in range(iters):
+        cb = lloyd_step(w, cb, use_pallas)
+    assign, _, _ = assign_moments(w, cb, use_pallas)
+    return cb, assign

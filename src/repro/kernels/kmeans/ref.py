@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the k-means assignment + cluster-moment kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_moments_ref(w: jnp.ndarray, codebook: jnp.ndarray):
+    """w: (P,) f32; codebook: (K,) f32 →
+    (assign (P,) int32, sums (K,) f32, counts (K,) f32).
+
+    Nearest-centroid by explicit distance argmin (the semantics the Pallas
+    kernel must match bit-for-bit up to ties)."""
+    d = (w[:, None] - codebook[None, :]) ** 2          # (P, K)
+    assign = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    k = codebook.shape[0]
+    sums = jax.ops.segment_sum(w, assign, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones_like(w), assign, num_segments=k)
+    return assign, sums, counts
+
+
+def lloyd_step_ref(w: jnp.ndarray, codebook: jnp.ndarray):
+    _, sums, counts = kmeans_assign_moments_ref(w, codebook)
+    return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), codebook)

@@ -1,0 +1,3 @@
+from repro.kernels.prune.ops import topk_mask
+
+__all__ = ["topk_mask"]

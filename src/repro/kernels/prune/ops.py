@@ -1,0 +1,63 @@
+"""Top-κ magnitude pruning via threshold bisection over the count kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prune import ref
+from repro.kernels.prune.prune import LANES, ROWS, count_above, mask_apply
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad(w):
+    p = w.shape[0]
+    tile = ROWS * LANES
+    padn = (-p) % tile
+    if padn:
+        w = jnp.concatenate([w, jnp.zeros((padn,), w.dtype)])
+    return w, p
+
+
+def topk_mask(w: jnp.ndarray, kappa: int, iters: int = 30,
+              use_pallas: bool | str = "auto") -> jnp.ndarray:
+    """θ = w · 1[|w| ≥ t*], with t* bisected so that nnz(θ) ≈ κ.
+
+    Bisection converges to the exact order statistic up to float-ulp ties;
+    any remaining tie-overshoot is the same arbitrary tie-breaking the
+    paper's top-κ projection allows.
+    """
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    flat = w.ravel().astype(jnp.float32)
+    if not use_pallas:
+        t = ref.topk_threshold_ref(flat, kappa)
+        return jnp.where(jnp.abs(w) >= t, w, 0.0)
+
+    wp, p = _pad(flat)
+    interp = not _on_tpu()
+
+    def counts(t):
+        return count_above(wp, t, interpret=interp)
+
+    hi = jnp.max(jnp.abs(flat))
+    lo = jnp.float32(0.0)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = 0.5 * (lo_ + hi_)
+        c = counts(mid)
+        # too many kept → raise threshold
+        lo_ = jnp.where(c > kappa, mid, lo_)
+        hi_ = jnp.where(c > kappa, hi_, mid)
+        return lo_, hi_
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    # invariant: count(>lo) > κ ≥ count(>hi); at convergence both sit at
+    # the (κ+1)-th order statistic, so masking with hi keeps exactly κ
+    # (fewer under float-identical ties — same arbitrary tie-break as any
+    # top-κ projection).
+    out = mask_apply(wp, hi, interpret=interp)[:p]
+    return out.reshape(w.shape)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the ℓ0-pruning kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def count_above_ref(w: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(w) > t).astype(jnp.float32)
+
+
+def mask_apply_ref(w: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(jnp.abs(w) > t, w, 0.0)
+
+
+def topk_threshold_ref(w: jnp.ndarray, kappa: int) -> jnp.ndarray:
+    """Exact κ-th largest |w| (the oracle the bisection must bracket)."""
+    a = jnp.sort(jnp.abs(w.ravel()))[::-1]
+    return a[kappa - 1]

@@ -1,0 +1,3 @@
+from repro.kernels.quant_matmul.ops import matmul, pack_quantized
+
+__all__ = ["matmul", "pack_quantized"]

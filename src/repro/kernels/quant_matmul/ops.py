@@ -1,0 +1,39 @@
+"""Public wrapper: padded/tiled codebook-dequant GEMM + helpers to put a
+model's quantized weights into kernel layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul import ref
+from repro.kernels.quant_matmul.quant_matmul import quant_matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(x: jnp.ndarray, idx: jnp.ndarray, codebook: jnp.ndarray,
+           use_pallas: bool | str = "auto", **tiles) -> jnp.ndarray:
+    """y = x @ codebook[idx], padding to tile boundaries as needed."""
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.quant_matmul_ref(x, idx, codebook)
+    m, k = x.shape
+    n = idx.shape[1]
+    bm = min(tiles.get("bm", 128), max(8, m))
+    bn = min(tiles.get("bn", 128), n)
+    bk = min(tiles.get("bk", 512), k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk)))
+    idxp = jnp.pad(idx, ((0, pk), (0, pn)))
+    y = quant_matmul(xp, idxp, codebook, bm=bm, bn=bn, bk=bk,
+                     interpret=not _on_tpu())
+    return y[:m, :n]
+
+
+def pack_quantized(w: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Dense weight matrix → uint8 index matrix under ``codebook``."""
+    mid = (codebook[1:] + codebook[:-1]) * 0.5
+    return jnp.searchsorted(mid, w).astype(jnp.uint8)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the codebook-dequant GEMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x: jnp.ndarray, idx: jnp.ndarray,
+                     codebook: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K) f32/bf16; idx: (K, N) uint8 codebook indices;
+    codebook: (C,) f32 → y (M, N) f32 = x @ codebook[idx]."""
+    w = codebook[idx.astype(jnp.int32)]            # (K, N) f32
+    return x.astype(jnp.float32) @ w

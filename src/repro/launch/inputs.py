@@ -1,0 +1,158 @@
+"""ShapeDtypeStruct stand-ins for every model input and state tree —
+weak-type-correct, shardable, zero device allocation. The dry-run lowers
+against these; nothing is ever materialized."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    SERVE_RULES, resolve_spec, tree_shardings)
+from repro.launch.steps import init_train_state, lc_param_paths
+from repro.models.transformer import (
+    cache_axes, init_cache, init_params, param_axes)
+
+
+def _sds(shape, dtype, mesh, names, rules=None):
+    sharding = NamedSharding(mesh, resolve_spec(tuple(names), tuple(shape),
+                                                mesh, rules))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _tree_sds(shapes_tree, axes_tree, mesh, rules=None):
+    """Match a jax.eval_shape result with a logical-axes tree → SDS tree."""
+    def mk(leaf, names):
+        return _sds(leaf.shape, leaf.dtype, mesh, names, rules)
+
+    return jax.tree_util.tree_map(
+        lambda names, leaf: mk(leaf, names), axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, (tuple, list)) and
+        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def _replicated_sds(shapes_tree, mesh):
+    rep = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=rep),
+        shapes_tree)
+
+
+def batch_specs(cfg, shape_cfg, mesh: Mesh) -> dict:
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    if cfg.input_mode == "tokens":
+        inputs = _sds((b, s), jnp.int32, mesh, ("batch", "seq"))
+    else:
+        inputs = _sds((b, s, cfg.d_input), jnp.bfloat16, mesh,
+                      ("batch", "seq", None))
+    labels = _sds((b, s), jnp.int32, mesh, ("batch", "seq"))
+    return {"inputs": inputs, "labels": labels}
+
+
+def params_specs(cfg, mesh: Mesh, dtype=None, rules=None):
+    shapes = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    if dtype is not None:  # serving runs on cast weights (bf16)
+        shapes = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, dtype if l.dtype == jnp.float32 else l.dtype),
+            shapes)
+    return _tree_sds(shapes, param_axes(cfg), mesh, rules)
+
+
+def train_state_specs(cfg, mesh: Mesh, with_lc: bool = True):
+    shapes = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg,
+                                 with_lc=with_lc))
+    axes = param_axes(cfg)
+    state_axes = {
+        "params": axes,
+        "opt": {"m": axes, "v": axes, "step": ()},
+        "step": (),
+    }
+    if with_lc:
+        paths = lc_param_paths(shapes["params"])
+        from repro.core.tasks import get_path
+        ref_axes = {p: tuple(get_path(axes, p)) for p in paths}
+        state_axes["lc"] = {"a": ref_axes, "lam": ref_axes, "mu": ()}
+    return _tree_sds(shapes, state_axes, mesh)
+
+
+def quantize_params_sds(params_sds, mesh: Mesh, cfg, k: int = 16):
+    """Replace every matrix leaf with the LC-quantized serving pack:
+    {"idx": uint8 (same shape/sharding), "cb": f32 codebook, replicated}.
+    Leaves inside scanned layer stacks get per-layer codebooks with a
+    leading stack dim (so lax.scan slices them with the layer)."""
+    from jax.sharding import PartitionSpec
+    from repro.core.tasks import flatten_params, get_path, set_path
+    rep = NamedSharding(mesh, P())
+    axes_flat = flatten_params(param_axes(cfg))
+    out = params_sds
+    for path, leaf in flatten_params(params_sds).items():
+        names = tuple(axes_flat[path])
+        stacked = bool(names) and names[0] == "layers"
+        logical_ndim = getattr(leaf, "ndim", 0) - (1 if stacked else 0)
+        if "experts" in names or path.endswith("/router"):
+            # MoE leaves cross the shard_map boundary whose in_specs are
+            # array-shaped; routed-expert packs need the grouped
+            # quant_matmul kernel inside the dispatch — served dense
+            continue
+        if logical_ndim >= 2 and leaf.dtype in (jnp.float32,
+                                                jnp.bfloat16):
+            cb_shape = (leaf.shape[0], k) if stacked else (k,)
+            cb_shard = NamedSharding(mesh, PartitionSpec(
+                *([None] * len(cb_shape))))
+            out = set_path(out, path, {
+                "idx": jax.ShapeDtypeStruct(leaf.shape, jnp.uint8,
+                                            sharding=leaf.sharding),
+                "cb": jax.ShapeDtypeStruct(cb_shape, jnp.float32,
+                                           sharding=cb_shard)})
+    return out
+
+
+def quantized_weight_bytes_per_chip(params_sds) -> float:
+    """Per-chip HBM read of the quantized weights (uint8 indices) —
+    the analytic boundary I/O of the fused quant_matmul kernel."""
+    import numpy as np
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(params_sds):
+        if leaf.dtype == jnp.uint8:
+            shard = leaf.sharding.shard_shape(leaf.shape)
+            total += float(np.prod(shard))  # 1 byte/elem
+    return total
+
+
+def decode_specs(cfg, shape_cfg, mesh: Mesh, quantized: bool = False):
+    """(params, cache, inputs, pos) stand-ins for serve_step.
+
+    ``seq_len`` is the KV-cache length (context already processed);
+    the step decodes one new token for every sequence in the batch."""
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    # serving: TP-only weight sharding (no FSDP re-gather per token)
+    params = params_specs(cfg, mesh, dtype=jnp.bfloat16,
+                          rules=SERVE_RULES)
+    if quantized:
+        params = quantize_params_sds(params, mesh, cfg)
+    cache_shapes = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, jnp.bfloat16))
+    cache = _tree_sds(cache_shapes, cache_axes(cfg), mesh)
+    if cfg.input_mode == "tokens":
+        inputs = _sds((b, 1), jnp.int32, mesh, ("batch", None))
+    else:
+        inputs = _sds((b, 1, cfg.d_input), jnp.bfloat16, mesh,
+                      ("batch", None, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return params, cache, inputs, pos
+
+
+def prefill_specs(cfg, shape_cfg, mesh: Mesh):
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    params = params_specs(cfg, mesh, dtype=jnp.bfloat16,
+                          rules=SERVE_RULES)
+    if cfg.input_mode == "tokens":
+        inputs = _sds((b, s), jnp.int32, mesh, ("batch", "seq"))
+    else:
+        inputs = _sds((b, s, cfg.d_input), jnp.bfloat16, mesh,
+                      ("batch", "seq", None))
+    return params, inputs

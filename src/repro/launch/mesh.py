@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    The "pod" axis is an outer data-parallel axis: batch shards over
+    ("pod", "data"), so the only cross-pod (DCN) traffic is the gradient
+    all-reduce — see distributed/sharding.py DEFAULT_RULES.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh for CPU tests/examples (1 device)."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,105 @@
+"""Compiled step functions: LC train step and serve (decode) step.
+
+``make_train_step`` builds the paper's L-step inner update as one pjit-able
+function: model loss + LC quadratic penalty (μ/2‖w − a − λ/μ‖² over the
+compressed parameter set) → grads → clip → optimizer. ``a = Δ(Θ)`` and the
+multipliers ``λ`` ride in the train state with the same sharding as the
+parameters, so the penalty adds zero collectives.
+
+``make_serve_step`` is the 1-token decode step (optionally over
+codebook-quantized weights — see kernels/quant_matmul)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tasks import flatten_params, get_path
+from repro.models.transformer import decode_step, loss_fn
+from repro.optim import AdamW, clip_by_global_norm
+
+
+def lc_param_paths(params_or_shapes) -> list[str]:
+    """The compressed set: every parameter with ndim ≥ 2 (matrices and
+    stacked matrices; norms/biases stay uncompressed, per paper practice)."""
+    flat = flatten_params(params_or_shapes)
+    return [p for p, l in flat.items() if getattr(l, "ndim", 0) >= 2]
+
+
+def lc_penalty_from_refs(params, a: dict, lam: dict,
+                         mu: jnp.ndarray) -> jnp.ndarray:
+    total = jnp.float32(0.0)
+    for p, a_leaf in a.items():
+        w = get_path(params, p).astype(jnp.float32)
+        d = w - a_leaf - lam[p] / mu
+        total = total + 0.5 * mu * jnp.sum(d * d)
+    return total
+
+
+def init_lc_refs(params, paths: list[str]) -> dict:
+    """Direct-compression placeholder: a = w (zero penalty at start),
+    λ = 0. The LC driver overwrites ``a`` after each real C step."""
+    a = {p: get_path(params, p).astype(jnp.float32) for p in paths}
+    lam = {p: jnp.zeros_like(v) for p, v in a.items()}
+    return {"a": a, "lam": lam, "mu": jnp.float32(1e-4)}
+
+
+def make_train_step(cfg, optimizer: AdamW | None = None,
+                    lr: float | Callable = 3e-4,
+                    clip_norm: float = 1.0,
+                    with_lc: bool = True):
+    optimizer = optimizer or AdamW()
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def train_step(state, batch):
+        def lossf(p):
+            loss, metrics = loss_fn(p, batch, cfg)
+            if with_lc:
+                pen = lc_penalty_from_refs(
+                    p, state["lc"]["a"], state["lc"]["lam"],
+                    state["lc"]["mu"])
+                metrics = dict(metrics, lc_penalty=pen)
+                loss = loss + pen
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            lossf, has_aux=True)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, opt_state = optimizer.update(
+            grads, state["opt"], state["params"], lr_fn(state["step"]))
+        new_state = dict(state, params=new_params, opt=opt_state,
+                         step=state["step"] + 1)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg, optimizer: AdamW | None = None,
+                     with_lc: bool = True):
+    from repro.models.transformer import init_params
+    optimizer = optimizer or AdamW()
+    params = init_params(key, cfg)
+    state = {"params": params, "opt": optimizer.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if with_lc:
+        state["lc"] = init_lc_refs(params, lc_param_paths(params))
+    return state
+
+
+def make_serve_step(cfg):
+    def serve_step(params, cache, inputs, pos):
+        return decode_step(params, cache, inputs, pos, cfg)
+    return serve_step
+
+
+def make_prefill_step(cfg):
+    from repro.models.transformer import forward_hidden
+    from repro.models.layers import unembed
+
+    def prefill_step(params, inputs):
+        hidden, _ = forward_hidden(params, inputs, cfg)
+        return unembed(params["embed"], hidden[:, -1:], cfg)
+
+    return prefill_step

@@ -1,0 +1,10 @@
+from repro.models.transformer import (
+    init_params, param_axes, forward_hidden, loss_fn, chunked_ce_loss,
+    decode_step, init_cache, cache_axes, prefill, count_params,
+    plan_stages)
+
+__all__ = [
+    "init_params", "param_axes", "forward_hidden", "loss_fn",
+    "chunked_ce_loss", "decode_step", "init_cache", "cache_axes",
+    "prefill", "count_params", "plan_stages",
+]

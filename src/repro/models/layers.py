@@ -1,0 +1,131 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU FFN, embeddings, inits.
+
+Pure functional style: params are nested dicts of jnp arrays; every
+forward takes (params, x, cfg) and is shape-polymorphic over batch/seq.
+Master params are fp32; compute casts to ``cfg.dtype``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def wload(leaf, dt):
+    """Load a weight for compute: dense array, or LC-quantized pack
+    {"idx": uint8 codebook indices, "cb": (K,) f32 codebook}.
+
+    The quantized path is the paper's compressed-serving deployment —
+    on TPU it runs through kernels/quant_matmul (dequant fused in VMEM;
+    only uint8 indices touch HBM). The jax.named_scope tag lets the
+    dry-run account it as that fused kernel."""
+    if isinstance(leaf, dict) and "idx" in leaf:
+        with jax.named_scope("fused_quant_matmul"):
+            return leaf["cb"][leaf["idx"].astype(jnp.int32)].astype(dt)
+    return leaf.astype(dt)
+
+
+def dense_init(key, shape, in_axis: int = 0) -> jnp.ndarray:
+    """Scaled-normal init, std = 1/sqrt(fan_in)."""
+    fan_in = shape[in_axis] if in_axis >= 0 else int(np.prod(shape[:-1]))
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, jnp.float32) * std
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------
+def rope_frequencies(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,D/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# SwiGLU dense FFN
+# ----------------------------------------------------------------------
+def init_dense_ffn(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff)),
+        "w_up": dense_init(k2, (d_model, d_ff)),
+        "w_down": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def dense_ffn(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    dt = cdtype(cfg)
+    g = x @ wload(params["w_gate"], dt)
+    u = x @ wload(params["w_up"], dt)
+    return (jax.nn.silu(g) * u) @ wload(params["w_down"], dt)
+
+
+# ----------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------
+def init_embed(key, cfg) -> dict:
+    if cfg.input_mode == "tokens":
+        # std 1/√d so that (×√d at lookup) hidden inputs are unit-scale and
+        # tied-unembed logits stay O(√d) at init
+        p = {"tokens": jax.random.normal(
+            key, (cfg.vocab_size, cfg.d_model), jnp.float32)
+            / np.sqrt(cfg.d_model)}
+    else:
+        # stub modality frontend: a linear projection of precomputed
+        # patch/frame embeddings (input_specs supplies the embeddings)
+        p = {"proj": dense_init(key, (cfg.d_input, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed(params: dict, inputs: jnp.ndarray, cfg) -> jnp.ndarray:
+    dt = cdtype(cfg)
+    if cfg.input_mode == "tokens":
+        x = wload(params["tokens"], dt)[inputs]
+        return x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    return inputs.astype(dt) @ wload(params["proj"], dt)
+
+
+def unembed(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    dt = cdtype(cfg)
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        return x @ wload(params["tokens"], dt).T
+    return x @ wload(params["unembed"], dt)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1).squeeze(-1)
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,206 @@
+"""Mixture-of-Experts FFN with shard_map dispatch.
+
+Routing is computed redundantly on every model-parallel column (router
+weights are replicated; tokens are sharded over the data axes), then each
+device packs the tokens assigned to *its* experts into a fixed-capacity
+(E_local, C, d) buffer via a sort-free rank trick (argsort by expert +
+searchsorted positions), runs the expert GEMMs locally, and scatter-adds
+gated results back — the only cross-device traffic is the final psum over
+the "model" axis, i.e. exactly the all-reduce a dense TP FFN would pay.
+No all-to-all, no (T, E, C) GShard dispatch tensor.
+
+Two static strategies, picked by divisibility:
+* "ep": n_experts % model_size == 0 → experts sharded over "model"
+  (deepseek-moe 64/16, jamba 16/16).
+* "tp": otherwise → every column holds all experts but only a 1/model
+  slice of d_expert (mixtral 8 experts on a 16-way axis).
+
+Both differentiate cleanly (gather/scatter transposes; argsort indices
+are constant wrt params).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+shard_map = jax.shard_map
+
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import batch_axes
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    ks = jax.random.split(key, 7)
+    e, d, fe = m.n_experts, cfg.d_model, m.d_expert
+    p = {
+        "router": dense_init(ks[0], (d, e)),
+        "w_gate": jax.vmap(lambda k: dense_init(k, (d, fe)))(
+            jax.random.split(ks[1], e)),
+        "w_up": jax.vmap(lambda k: dense_init(k, (d, fe)))(
+            jax.random.split(ks[2], e)),
+        "w_down": jax.vmap(lambda k: dense_init(k, (fe, d)))(
+            jax.random.split(ks[3], e)),
+    }
+    if m.n_shared > 0:
+        fs = m.n_shared * fe
+        p["sw_gate"] = dense_init(ks[4], (d, fs))
+        p["sw_up"] = dense_init(ks[5], (d, fs))
+        p["sw_down"] = dense_init(ks[6], (fs, d))
+    return p
+
+
+def moe_axes(cfg) -> dict:
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+    if cfg.moe.n_shared > 0:
+        ax["sw_gate"] = ("embed", "mlp")
+        ax["sw_up"] = ("embed", "mlp")
+        ax["sw_down"] = ("mlp", "embed")
+    return ax
+
+
+def _dispatch_compute(x, gates, idx, wg, wu, wd, *, e0, e_local,
+                      capacity: int, dtype):
+    """Pack → expert GEMMs → gated combine, for experts [e0, e0+e_local).
+
+    x: (T, d); gates/idx: (T, k); wg/wu: (eL, d, fe); wd: (eL, fe, d).
+    """
+    t, k = idx.shape
+    d = x.shape[-1]
+    c = capacity
+    rel = idx.reshape(-1) - e0
+    valid = (rel >= 0) & (rel < e_local)
+    rel_c = jnp.where(valid, rel, e_local).astype(jnp.int32)
+    order = jnp.argsort(rel_c, stable=True)
+    sorted_rel = rel_c[order]
+    first = jnp.searchsorted(sorted_rel, sorted_rel, side="left")
+    pos = jnp.arange(t * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    tok = (order // k).astype(jnp.int32)
+    gate_sorted = gates.reshape(-1)[order]
+    keep = (sorted_rel < e_local) & (pos < c)
+    slot = jnp.where(keep, sorted_rel * c + pos, e_local * c)
+
+    buf_tok = jnp.zeros((e_local * c + 1,), jnp.int32).at[slot].set(tok)
+    buf_gate = jnp.zeros((e_local * c + 1,), gates.dtype).at[slot].set(
+        jnp.where(keep, gate_sorted, 0.0))
+    buf_tok = buf_tok[:e_local * c]
+    buf_gate = buf_gate[:e_local * c]
+
+    xb = x[buf_tok].reshape(e_local, c, d)
+    g = jnp.einsum("ecd,edf->ecf", xb, wg.astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", xb, wu.astype(dtype))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, wd.astype(dtype))
+    y = (y.reshape(e_local * c, d)
+         * buf_gate[:, None].astype(dtype))
+    return jnp.zeros((t, d), dtype).at[buf_tok].add(y)
+
+
+def _moe_local(x, router_w, wg, wu, wd, cfg, *, e0, e_local, capacity,
+               model_axis=None, batch_ax=None):
+    """Per-device MoE body (runs inside shard_map, or directly unsharded).
+
+    x: (T, d) local tokens. Returns (y (T, d), aux scalar).
+    """
+    m = cfg.moe
+    dtype = x.dtype
+    logits = (x @ router_w.astype(dtype)).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)      # renorm
+    gates = gates.astype(dtype)
+
+    y = _dispatch_compute(x, gates, idx, wg, wu, wd, e0=e0,
+                          e_local=e_local, capacity=capacity, dtype=dtype)
+
+    # Switch-style load-balance loss: E · Σ_e f_e · P_e
+    e = m.n_experts
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)          # (T,k,E)
+    f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)             # (E,)
+    p_e = jnp.mean(probs, axis=0)
+    if batch_ax:
+        n = jax.lax.psum(1, batch_ax)
+        f_e = jax.lax.psum(f_e, batch_ax) / n
+        p_e = jax.lax.psum(p_e, batch_ax) / n
+    aux = e * jnp.sum(f_e * p_e)
+
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
+    return y, aux
+
+
+def moe_ffn(params, x, cfg, mesh):
+    """x: (B, S, d_model) → (y, aux_loss). Routed experts + shared experts."""
+    m = cfg.moe
+    b, s, d = x.shape
+    dtype = x.dtype
+
+    if mesh is not None and "model" in mesh.axis_names \
+            and np.prod(mesh.devices.shape) > 1:
+        model_size = dict(zip(mesh.axis_names,
+                              mesh.devices.shape))["model"]
+        baxes = batch_axes(mesh)
+        bsz = 1
+        for ax, n in zip(mesh.axis_names, mesh.devices.shape):
+            if ax in baxes:
+                bsz *= n
+        shard_batch = (b % bsz == 0) and bsz > 1
+        strategy = "ep" if m.n_experts % model_size == 0 else "tp"
+        e_local = m.n_experts // model_size if strategy == "ep" \
+            else m.n_experts
+        t_loc = (b // bsz if shard_batch else b) * s
+        capacity = int(np.ceil(t_loc * m.top_k / m.n_experts
+                               * m.capacity_factor))
+
+        xs = P(baxes if shard_batch else None, None, None)
+        if strategy == "ep":
+            wspec = P("model", None, None)
+        else:
+            wspec = P(None, None, "model")
+        wdspec = P("model", None, None) if strategy == "ep" \
+            else P(None, "model", None)
+
+        def mapped(x_blk, rw, wg, wu, wd):
+            tb, ts, td = x_blk.shape
+            e0 = jax.lax.axis_index("model") * e_local \
+                if strategy == "ep" else 0
+            y, aux = _moe_local(
+                x_blk.reshape(tb * ts, td), rw, wg, wu, wd, cfg,
+                e0=e0, e_local=e_local, capacity=capacity,
+                model_axis="model",
+                batch_ax=baxes if shard_batch else None)
+            if not shard_batch and baxes:
+                # tokens replicated over data axes: aux already equal
+                pass
+            return y.reshape(tb, ts, td), aux
+
+        y, aux = shard_map(
+            mapped, mesh=mesh,
+            in_specs=(xs, P(None, None), wspec, wspec, wdspec),
+            out_specs=(xs, P()), check_vma=False,
+        )(x, params["router"], params["w_gate"], params["w_up"],
+          params["w_down"])
+    else:
+        capacity = int(np.ceil(b * s * m.top_k / m.n_experts
+                               * m.capacity_factor))
+        y, aux = _moe_local(
+            x.reshape(b * s, d), params["router"], params["w_gate"],
+            params["w_up"], params["w_down"], cfg,
+            e0=0, e_local=m.n_experts, capacity=capacity)
+        y = y.reshape(b, s, d)
+
+    if m.n_shared > 0:
+        g = x @ params["sw_gate"].astype(dtype)
+        u = x @ params["sw_up"].astype(dtype)
+        y = y + (jax.nn.silu(g) * u) @ params["sw_down"].astype(dtype)
+    return y, aux.astype(jnp.float32)

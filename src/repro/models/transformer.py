@@ -1,0 +1,429 @@
+"""Composable decoder stack: pattern-scanned blocks + embeddings + head.
+
+A model = embedding → [stages] → final norm → unembed. Each stage is
+either a `lax.scan` over ``reps`` repetitions of a layer *pattern* (one
+set of block params per pattern position, stacked over reps — compile
+time O(|pattern|)) or an unrolled tail. Blocks are pre-norm residual:
+mixer (attention/MLA/Mamba/mLSTM/sLSTM) then FFN (dense/MoE/none).
+
+The full-sequence path returns *hidden states*, not logits — the loss is
+computed with a sequence-chunked cross-entropy (`chunked_ce_loss`) so the
+(B, S, vocab) logit tensor is never materialized (vocab=262k × S=32k
+would not fit any HBM).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import active_mesh, constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (
+    cdtype, cross_entropy, dense_init, dense_ffn, embed, init_dense_ffn,
+    init_embed, rms_norm, unembed)
+
+# mixer registry: init, axes, forward, decode, cache-init
+MIXERS = {
+    "attn": (attn.init_attn, attn.attn_axes, attn.attn_forward,
+             attn.attn_decode, attn.init_attn_cache),
+    "mla": (attn.init_mla, attn.mla_axes, attn.mla_forward,
+            attn.mla_decode, attn.init_mla_cache),
+    "mamba": (ssm.init_mamba, ssm.mamba_axes, ssm.mamba_forward,
+              ssm.mamba_decode, ssm.init_mamba_cache),
+    "mlstm": (ssm.init_mlstm, ssm.mlstm_axes, ssm.mlstm_forward,
+              ssm.mlstm_decode, ssm.init_mlstm_cache),
+    "slstm": (ssm.init_slstm, ssm.slstm_axes, ssm.slstm_forward,
+              ssm.slstm_decode, ssm.init_slstm_cache),
+}
+
+
+# ----------------------------------------------------------------------
+# Stage planning
+# ----------------------------------------------------------------------
+def plan_stages(cfg) -> list[dict]:
+    stages = []
+    if cfg.lead:
+        stages.append({"kind": "unroll", "specs": list(cfg.lead),
+                       "reps": 1})
+    if cfg.pattern_reps > 1:
+        stages.append({"kind": "scan", "specs": list(cfg.pattern),
+                       "reps": cfg.pattern_reps})
+    elif cfg.pattern_reps == 1:
+        stages.append({"kind": "unroll", "specs": list(cfg.pattern),
+                       "reps": 1})
+    if cfg.tail:
+        stages.append({"kind": "unroll", "specs": list(cfg.tail),
+                       "reps": 1})
+    return stages
+
+
+# ----------------------------------------------------------------------
+# Block init / axes
+# ----------------------------------------------------------------------
+def init_block(key, spec, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "mixer_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mixer": MIXERS[spec.mixer][0](k1, cfg),
+    }
+    if spec.ffn == "dense":
+        p["ffn_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["ffn"] = init_dense_ffn(k2, cfg.d_model, cfg.d_ff)
+    elif spec.ffn == "moe":
+        p["ffn_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["ffn"] = moe_mod.init_moe(k2, cfg)
+    return p
+
+
+def block_axes(spec, cfg) -> dict:
+    ax = {
+        "mixer_norm": ("embed",),
+        "mixer": MIXERS[spec.mixer][1](cfg),
+    }
+    if spec.ffn == "dense":
+        ax["ffn_norm"] = ("embed",)
+        ax["ffn"] = {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+                     "w_down": ("mlp", "embed")}
+    elif spec.ffn == "moe":
+        ax["ffn_norm"] = ("embed",)
+        ax["ffn"] = moe_mod.moe_axes(cfg)
+    return ax
+
+
+def init_params(key, cfg) -> dict:
+    stages = plan_stages(cfg)
+    ke, kh, *kst = jax.random.split(key, 2 + len(stages))
+    params = {"embed": init_embed(ke, cfg),
+              "final_norm": jnp.zeros((cfg.d_model,), jnp.float32)}
+    st_params = {}
+    for si, (st, k) in enumerate(zip(stages, kst)):
+        sp = {}
+        for pi, spec in enumerate(st["specs"]):
+            kk = jax.random.fold_in(k, pi)
+            if st["kind"] == "scan":
+                keys = jax.random.split(kk, st["reps"])
+                sp[f"pos{pi}"] = jax.vmap(
+                    lambda kx: init_block(kx, spec, cfg))(keys)
+            else:
+                sp[f"pos{pi}"] = init_block(kk, spec, cfg)
+        st_params[f"s{si}"] = sp
+    params["stages"] = st_params
+    return params
+
+
+def param_axes(cfg) -> dict:
+    stages = plan_stages(cfg)
+    if cfg.input_mode == "tokens":
+        emb = {"tokens": ("vocab", "embed")}
+    else:
+        emb = {"proj": ("embed", None)}
+    if not cfg.tie_embeddings or cfg.input_mode != "tokens":
+        emb["unembed"] = ("embed", "vocab")
+    axes = {"embed": emb, "final_norm": ("embed",)}
+    st_axes = {}
+    for si, st in enumerate(stages):
+        sp = {}
+        for pi, spec in enumerate(st["specs"]):
+            bx = block_axes(spec, cfg)
+            if st["kind"] == "scan":
+                bx = jax.tree_util.tree_map(
+                    lambda t: ("layers", *t), bx,
+                    is_leaf=lambda x: isinstance(x, tuple))
+            sp[f"pos{pi}"] = bx
+        st_axes[f"s{si}"] = sp
+    axes["stages"] = st_axes
+    return axes
+
+
+# ----------------------------------------------------------------------
+# Forward (train / prefill)
+# ----------------------------------------------------------------------
+def _apply_block_full(spec, bp, x, cfg, positions, want_cache=False):
+    mesh = active_mesh()
+    h = rms_norm(x, bp["mixer_norm"], cfg.norm_eps)
+    cache = None
+    if want_cache:
+        h, cache = MIXERS[spec.mixer][2](bp["mixer"], h, cfg, spec,
+                                         positions, return_cache=True)
+    else:
+        h = MIXERS[spec.mixer][2](bp["mixer"], h, cfg, spec, positions)
+    x = constrain(x + h, ("batch", "seq", None))
+    aux = jnp.float32(0.0)
+    if spec.ffn == "dense":
+        h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
+        x = x + dense_ffn(bp["ffn"], h, cfg)
+    elif spec.ffn == "moe":
+        h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
+        y, aux = moe_mod.moe_ffn(bp["ffn"], h, cfg, mesh)
+        x = x + y
+    return constrain(x, ("batch", "seq", None)), aux, cache
+
+
+def forward_hidden(params, inputs, cfg, return_caches: bool = False):
+    """inputs: (B, S) int tokens or (B, S, d_input) embeddings.
+
+    Returns (hidden (B, S, d_model), aux_loss scalar) — and, with
+    ``return_caches=True`` (prefill), a decode-ready cache pytree whose
+    layout matches ``init_cache`` (seq-sized; the server pads to max_len).
+    """
+    x = embed(params["embed"], inputs, cfg)
+    x = constrain(x, ("batch", "seq", None))
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    aux_total = jnp.float32(0.0)
+    caches = {}
+
+    for si, st in enumerate(plan_stages(cfg)):
+        sp = params["stages"][f"s{si}"]
+        stage_cache = {}
+        if st["kind"] == "scan":
+            def body(carry, rep_params):
+                xx = carry
+                aux = jnp.float32(0.0)
+                cc = {}
+                for pi, spec in enumerate(st["specs"]):
+                    xx, a, c1 = _apply_block_full(
+                        spec, rep_params[f"pos{pi}"], xx, cfg, positions,
+                        want_cache=return_caches)
+                    aux = aux + a
+                    if return_caches:
+                        cc[f"pos{pi}"] = c1
+                return xx, (aux, cc)
+
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, (auxs, stage_cache) = jax.lax.scan(body_fn, x, sp)
+            aux_total = aux_total + jnp.sum(auxs)
+        else:
+            for pi, spec in enumerate(st["specs"]):
+                def blk(xx, _spec=spec, _bp=sp[f"pos{pi}"]):
+                    return _apply_block_full(_spec, _bp, xx, cfg,
+                                             positions,
+                                             want_cache=return_caches)
+                if cfg.remat:
+                    blk = jax.checkpoint(blk)
+                x, a, c1 = blk(x)
+                aux_total = aux_total + a
+                if return_caches:
+                    stage_cache[f"pos{pi}"] = c1
+        if return_caches:
+            caches[f"s{si}"] = stage_cache
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_caches:
+        return hidden, aux_total, caches
+    return hidden, aux_total
+
+
+def chunked_ce_loss(params, hidden, labels, cfg, chunk: int = 512,
+                    mask=None):
+    """Sequence-chunked cross-entropy: never materializes (B,S,V)."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    nc = s // c
+    hc = jnp.moveaxis(hidden.reshape(b, nc, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+    if mask is None:
+        mk = jnp.ones((nc, b, c), jnp.float32)
+    else:
+        mk = jnp.moveaxis(mask.reshape(b, nc, c), 1, 0).astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        h, l, m = inp
+        logits = unembed(params["embed"], h, cfg)
+        logits = constrain(logits, ("batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), l[..., None], axis=-1)[..., 0]
+        nll = jnp.sum((lse - gold) * m)
+        return (carry[0] + nll, carry[1] + jnp.sum(m)), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc, mk))
+    return total / jnp.maximum(count, 1.0)
+
+
+def loss_fn(params, batch, cfg):
+    """batch: {"inputs": ..., "labels": (B,S)} → (loss, metrics)."""
+    hidden, aux = forward_hidden(params, batch["inputs"], cfg)
+    ce = chunked_ce_loss(params, hidden, batch["labels"], cfg,
+                         mask=batch.get("mask"))
+    loss = ce
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ----------------------------------------------------------------------
+# Decode
+# ----------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or cdtype(cfg)
+    cache = {}
+    for si, st in enumerate(plan_stages(cfg)):
+        sc = {}
+        for pi, spec in enumerate(st["specs"]):
+            c1 = MIXERS[spec.mixer][4](cfg, spec, batch, max_len, dtype)
+            if st["kind"] == "scan":
+                c1 = jax.tree_util.tree_map(
+                    lambda a: jnp.zeros((st["reps"],) + a.shape, a.dtype),
+                    c1)
+            sc[f"pos{pi}"] = c1
+        cache[f"s{si}"] = sc
+    return cache
+
+
+def cache_axes(cfg) -> dict:
+    """Logical axes for cache leaves (for sharding)."""
+    names = {
+        "attn": {"k": ("batch", "kv_seq", "kv_heads", None),
+                 "v": ("batch", "kv_seq", "kv_heads", None)},
+        "mla": {"ckv": ("batch", "kv_seq", None),
+                "k_rope": ("batch", "kv_seq", None)},
+        "mamba": {"conv": ("batch", None, "inner"),
+                  "ssm": ("batch", "inner", "state")},
+        "mlstm": {"conv": ("batch", None, "inner"),
+                  "C": ("batch", "heads", None, None),
+                  "n": ("batch", "heads", None),
+                  "m": ("batch", "heads")},
+        "slstm": {"c": ("batch", "inner"), "n": ("batch", "inner"),
+                  "h": ("batch", "inner"), "m": ("batch", "inner")},
+    }
+    axes = {}
+    for si, st in enumerate(plan_stages(cfg)):
+        sc = {}
+        for pi, spec in enumerate(st["specs"]):
+            ax = names[spec.mixer]
+            if st["kind"] == "scan":
+                ax = jax.tree_util.tree_map(
+                    lambda t: ("layers", *t), ax,
+                    is_leaf=lambda x: isinstance(x, tuple))
+            sc[f"pos{pi}"] = ax
+        axes[f"s{si}"] = sc
+    return axes
+
+
+def _apply_block_decode(spec, bp, x, cache, pos, cfg, layer_idx=None):
+    h = rms_norm(x, bp["mixer_norm"], cfg.norm_eps)
+    h, new_cache = MIXERS[spec.mixer][3](bp["mixer"], h, cache, pos,
+                                         cfg, spec, layer_idx=layer_idx)
+    x = x + h
+    if spec.ffn == "dense":
+        h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
+        x = x + dense_ffn(bp["ffn"], h, cfg)
+    elif spec.ffn == "moe":
+        h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
+        y, _ = moe_mod.moe_ffn(bp["ffn"], h, cfg, active_mesh())
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(params, cache, inputs, pos, cfg):
+    """One token for every sequence in the batch.
+
+    inputs: (B, 1) tokens or (B, 1, d_input); pos: scalar int32.
+    Returns (logits (B, 1, vocab), new_cache).
+    """
+    x = embed(params["embed"], inputs, cfg)
+    new_cache = {}
+    for si, st in enumerate(plan_stages(cfg)):
+        sp = params["stages"][f"s{si}"]
+        sc = cache[f"s{si}"]
+        nc_stage = {}
+        if st["kind"] == "scan":
+            # the stacked cache rides in the scan CARRY: each layer's
+            # update is a token-sized dynamic-update-slice into the
+            # shared (donated) buffer — O(token) writes, never O(cache)
+            def body(carry, rep_params):
+                xx, cc, li = carry
+                ncc = dict(cc)
+                for pi, spec in enumerate(st["specs"]):
+                    xx, ncc[f"pos{pi}"] = _apply_block_decode(
+                        spec, rep_params[f"pos{pi}"], xx,
+                        ncc[f"pos{pi}"], pos, cfg, layer_idx=li)
+                return (xx, ncc, li + 1), None
+
+            (x, nc_stage, _), _ = jax.lax.scan(
+                body, (x, sc, jnp.int32(0)), sp)
+        else:
+            for pi, spec in enumerate(st["specs"]):
+                x, nc1 = _apply_block_decode(
+                    spec, sp[f"pos{pi}"], x, sc[f"pos{pi}"], pos, cfg)
+                nc_stage[f"pos{pi}"] = nc1
+        new_cache[f"s{si}"] = nc_stage
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)
+    return constrain(logits, ("batch", None, "vocab")), new_cache
+
+
+def prefill(params, inputs, cfg, max_len: int | None = None):
+    """Run the full-sequence path, then return last-token logits plus a
+    cache built by replaying decode steps is wasteful — instead the
+    serving runtime uses chunked prefill via decode for recurrent mixers
+    and direct cache writes for attention. For the dry-run and tests we
+    expose the simple semantic version: hidden → last logits."""
+    hidden, _ = forward_hidden(params, inputs, cfg)
+    return unembed(params["embed"], hidden[:, -1:], cfg)
+
+
+# ----------------------------------------------------------------------
+# Analytic parameter counts (for roofline MODEL_FLOPS and docs)
+# ----------------------------------------------------------------------
+def count_params(cfg, active_only: bool = False) -> int:
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    total = v * d if cfg.input_mode == "tokens" else cfg.d_input * d
+    if not cfg.tie_embeddings or cfg.input_mode != "tokens":
+        total += d * v
+
+    def mixer_count(spec):
+        if spec.mixer == "attn":
+            return d * cfg.q_dim * 2 + d * cfg.kv_dim * 2
+        if spec.mixer == "mla":
+            m = cfg.mla
+            qk = m.qk_nope_dim + m.qk_rope_dim
+            return (d * m.q_lora_rank
+                    + m.q_lora_rank * cfg.n_heads * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * cfg.n_heads
+                    * (m.qk_nope_dim + m.v_head_dim)
+                    + cfg.n_heads * m.v_head_dim * d)
+        if spec.mixer == "mamba":
+            di, dtr = ssm._mamba_dims(cfg)
+            ds = cfg.mamba.d_state
+            return (d * 2 * di + cfg.mamba.d_conv * di
+                    + di * (dtr + 2 * ds) + dtr * di + di * ds
+                    + 3 * di + di * d)  # conv_b, dt_bias, D
+        if spec.mixer == "mlstm":
+            di, _ = ssm._mlstm_dims(cfg)
+            return (d * 2 * di + cfg.xlstm.conv_kernel * di + 3 * di * di
+                    + 2 * di * cfg.n_heads + 2 * cfg.n_heads  # bi, bf
+                    + 2 * di + di * d)
+        if spec.mixer == "slstm":
+            di, dh, ffs = ssm._slstm_dims(cfg)
+            return (d * 4 * di + 4 * cfg.n_heads * dh * dh + 4 * di
+                    + di  # out_norm
+                    + di * 2 * ffs + ffs * d)
+        raise ValueError(spec.mixer)
+
+    def ffn_count(spec):
+        if spec.ffn == "dense":
+            return 3 * d * ff
+        if spec.ffn == "moe":
+            m = cfg.moe
+            routed = m.n_experts * 3 * d * m.d_expert
+            if active_only:
+                routed = m.top_k * 3 * d * m.d_expert
+            shared = m.n_shared * 3 * d * m.d_expert
+            return d * m.n_experts + routed + shared
+        return 0
+
+    for spec in cfg.all_layer_specs():
+        norms = d if spec.ffn == "none" else 2 * d
+        total += mixer_count(spec) + ffn_count(spec) + norms
+    total += d  # final norm
+    return int(total)

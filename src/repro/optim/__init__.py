@@ -1,0 +1,6 @@
+from repro.optim.optimizer import (
+    AdamW, SGDM, clip_by_global_norm, global_norm)
+from repro.optim import schedules
+
+__all__ = ["AdamW", "SGDM", "clip_by_global_norm", "global_norm",
+           "schedules"]

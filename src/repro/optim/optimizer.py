@@ -1,0 +1,88 @@
+"""Optimizers (pure JAX, sharded-state-friendly).
+
+AdamW for LM pretraining, SGD+Nesterov-momentum for paper-faithful L
+steps (the paper's showcase uses SGD momentum 0.9 nesterov). States are
+f32 pytrees with the same structure (and therefore sharding) as params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        z = _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": _tmap(jnp.copy, z),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+        m = _tmap(lambda m_, g: self.b1 * m_
+                  + (1 - self.b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: self.b2 * v_
+                  + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        new_params = _tmap(
+            lambda p, m_, v_: (p.astype(jnp.float32)
+                               - lr * ((m_ / c1)
+                                       / (jnp.sqrt(v_ / c2) + self.eps)
+                                       + self.weight_decay
+                                       * p.astype(jnp.float32))
+                               ).astype(p.dtype),
+            params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+
+@dataclass(frozen=True)
+class SGDM:
+    """SGD + (Nesterov) momentum — the paper's L-step optimizer."""
+    momentum: float = 0.9
+    nesterov: bool = True
+
+    def init(self, params):
+        return {"mom": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params, lr):
+        mom = _tmap(lambda b, g: self.momentum * b + g.astype(jnp.float32),
+                    state["mom"], grads)
+        if self.nesterov:
+            upd = _tmap(lambda g, b: g.astype(jnp.float32)
+                        + self.momentum * b, grads, mom)
+        else:
+            upd = mom
+        new_params = _tmap(
+            lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
+            params, upd)
+        return new_params, {"mom": mom, "step": state["step"] + 1}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return _tmap(lambda l: l * scale.astype(l.dtype), tree), n

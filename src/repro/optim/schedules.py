@@ -1,0 +1,27 @@
+"""LR and μ schedules."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def constant(lr: float):
+    return lambda step: lr
+
+
+def cosine_warmup(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        import jax.numpy as jnp
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return peak * w * (floor + (1 - floor)
+                           * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return f
+
+
+def lstep_decay(base: float, decay: float = 0.98):
+    """Paper §6: lr_base · decay^lc_step, constant within each L step."""
+    return lambda lc_step: base * (decay ** lc_step)
+
+
+def mu_exponential(mu0: float, a: float, n: int) -> list[float]:
+    return [mu0 * a**k for k in range(n)]

@@ -1,0 +1,8 @@
+from repro.runtime.fault_tolerance import (
+    FaultInjector, RetryPolicy, StragglerMonitor)
+from repro.runtime.trainer import LCTrainer, TrainerConfig
+from repro.runtime.server import Server, quantize_params_for_serving
+
+__all__ = ["FaultInjector", "RetryPolicy", "StragglerMonitor",
+           "LCTrainer", "TrainerConfig", "Server",
+           "quantize_params_for_serving"]

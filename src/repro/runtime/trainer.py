@@ -1,0 +1,178 @@
+"""LCTrainer: the production training loop.
+
+Composes the paper's LC algorithm with the distributed substrate:
+
+    for each LC step k (μ = μ0·aᵏ):
+        L step  — ``steps_per_l`` compiled train steps (loss + penalty)
+        C step  — jitted sharded projections Θ ← Π(w − λ/μ)
+        λ step  — multiplier update
+        monitors — L-step loss decrease, C-step distortion decrease (§7)
+
+    throughout: checkpoint every N steps (async), retry transient
+    failures, restore-from-checkpoint on hard failure, straggler
+    tracking, deterministic seekable data (exact resume).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.algorithm import LCAlgorithm
+from repro.core.tasks import get_path
+from repro.distributed.sharding import use_mesh
+from repro.launch.steps import make_train_step
+from repro.optim import AdamW
+from repro.runtime.fault_tolerance import (
+    FaultInjector, RetryPolicy, StragglerMonitor)
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclass
+class TrainerConfig:
+    steps_per_l: int = 20
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    keep_last: int = 3
+    lr: float = 3e-4
+    clip_norm: float = 1.0
+    straggler_factor: float = 3.0
+
+
+class LCTrainer:
+    def __init__(self, cfg, lc: LCAlgorithm, data, mesh=None,
+                 tcfg: TrainerConfig | None = None,
+                 optimizer: AdamW | None = None,
+                 fault_injector: FaultInjector | None = None):
+        self.cfg = cfg
+        self.lc = lc
+        self.data = data
+        self.mesh = mesh
+        self.tcfg = tcfg or TrainerConfig()
+        self.optimizer = optimizer or AdamW()
+        self.retry = RetryPolicy()
+        self.straggler = StragglerMonitor(
+            factor=self.tcfg.straggler_factor)
+        self.faults = fault_injector or FaultInjector()
+        self.ckpt = (CheckpointManager(self.tcfg.ckpt_dir,
+                                       self.tcfg.keep_last)
+                     if self.tcfg.ckpt_dir else None)
+        self._train_step = jax.jit(make_train_step(
+            cfg, self.optimizer, lr=self.tcfg.lr,
+            clip_norm=self.tcfg.clip_norm, with_lc=True))
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def init_state(self, key):
+        from repro.launch.steps import init_train_state
+        with use_mesh(self.mesh):
+            state = init_train_state(key, self.cfg, self.optimizer,
+                                     with_lc=True)
+        # attach real LC state (Θ, λ) from the algorithm
+        lc_state = self.lc.init(state["params"])
+        state["lc"] = self._refs_from_lc(state["params"], lc_state)
+        self._lc_state = lc_state
+        return state
+
+    def _refs_from_lc(self, params, lc_state):
+        """Flatten LC (a, λ) into the train-state penalty refs."""
+        a, lam = {}, {}
+        for t in self.lc.tasks:
+            ts = lc_state["tasks"][t.name]
+            for p in t.paths:
+                a[p] = ts["a"][p]
+                lam[p] = ts["lam"][p]
+        return {"a": a, "lam": lam, "mu": lc_state["mu"]}
+
+    # ------------------------------------------------------------------
+    def _one_step(self, state, step: int):
+        self.faults.maybe_fail(step)
+        batch = self.data.batch_at(step) if hasattr(self.data, "batch_at") \
+            else self.data(step)
+        return self._train_step(state, batch)
+
+    def _l_step(self, state, lc_k: int, global_step: int):
+        """One full L step = steps_per_l optimizer steps."""
+        metrics = {}
+        for i in range(self.tcfg.steps_per_l):
+            step = global_step + i
+            t0 = time.time()
+            try:
+                state, metrics = self.retry.run(
+                    self._one_step, state, step,
+                    on_retry=lambda a, e: log.warning(
+                        "step %d retry %d: %s", step, a, e))
+            except RuntimeError:
+                if self.ckpt and self.ckpt.latest_step() is not None:
+                    log.error("step %d hard failure — restoring", step)
+                    state, _ = self.ckpt.restore(state)
+                else:
+                    raise
+            dt = time.time() - t0
+            if self.straggler.observe(dt):
+                log.warning("straggler: step %d took %.3fs", step, dt)
+            if self.ckpt and step > 0 \
+                    and step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(state, step)
+        return state, metrics
+
+    # ------------------------------------------------------------------
+    def run(self, key, n_lc_steps: int | None = None):
+        state = self.init_state(key)
+        lc_state = self._lc_state
+        schedule = self.lc.mu_schedule[:n_lc_steps] \
+            if n_lc_steps else self.lc.mu_schedule
+        global_step = int(state["step"])
+
+        for k, mu in enumerate(schedule):
+            lc_state = self.lc.set_mu(lc_state, mu, k)
+            state["lc"] = self._refs_from_lc(state["params"], lc_state)
+            pen0 = float(self.lc.penalty(state["params"], lc_state))
+
+            state, metrics = self._l_step(state, k, global_step)
+            global_step += self.tcfg.steps_per_l
+
+            params = state["params"]
+            lc_state = self.lc.c_step(params, lc_state)
+            lc_state = self.lc.multiplier_step(params, lc_state)
+            state["lc"] = self._refs_from_lc(params, lc_state)
+
+            dist = {n: float(v) for n, v in
+                    self.lc.distortion(params, lc_state).items()}
+            rec = {
+                "lc_step": k, "mu": float(mu),
+                "loss": float(metrics.get("loss", np.nan)),
+                "ce": float(metrics.get("ce", np.nan)),
+                "penalty_start": pen0,
+                "distortion": dist,
+                "compression_ratio": float(
+                    self.lc.compression_ratio(params, lc_state)),
+                "stragglers": self.straggler.stragglers,
+            }
+            self.history.append(rec)
+            log.info("LC step %d: %s", k, rec)
+
+        self._lc_state = lc_state
+        if self.ckpt:
+            self.ckpt.save(state, global_step, blocking=True)
+        return state, lc_state
+
+    # ------------------------------------------------------------------
+    def compressed_params(self, state, lc_state):
+        """Final model: w ← Δ(Θ)."""
+        from repro.core.tasks import set_path
+        params = state["params"]
+        for t in self.lc.tasks:
+            ts = lc_state["tasks"][t.name]
+            for p in t.paths:
+                leaf = get_path(params, p)
+                params = set_path(params, p,
+                                  ts["a"][p].astype(leaf.dtype))
+        return params

@@ -1,0 +1,8 @@
+import os
+
+# tests run on the single real CPU device — never force fake devices here
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,186 @@
+"""Pallas kernels vs pure-jnp oracles — interpret mode on CPU, with
+shape/dtype sweeps per the kernel-testing contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.kmeans import ops as kops
+from repro.kernels.kmeans import ref as kref
+from repro.kernels.prune import ops as pops
+from repro.kernels.prune import ref as pref
+from repro.kernels.quant_matmul import ops as qops
+from repro.kernels.quant_matmul import ref as qref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ----------------------------------------------------------------------
+# kmeans
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("p,k", [
+    (8192, 2), (8192, 16), (5000, 8),      # padded case
+    (1024, 256), (65536, 64), (1023, 4),
+])
+def test_kmeans_assign_moments_vs_ref(p, k):
+    kw, kc = jax.random.split(jax.random.fold_in(KEY, p * k))
+    w = jax.random.normal(kw, (p,))
+    cb = jnp.sort(jax.random.normal(kc, (k,)))
+    a1, s1, c1 = kops.assign_moments(w, cb, use_pallas=True)
+    a2, s2, c2 = kref.kmeans_assign_moments_ref(w, cb)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=3e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_dtypes(dtype):
+    w = jax.random.normal(KEY, (4096,)).astype(dtype)
+    cb = jnp.linspace(-2, 2, 8)
+    a1, _, _ = kops.assign_moments(w.astype(jnp.float32), cb,
+                                   use_pallas=True)
+    a2, _, _ = kref.kmeans_assign_moments_ref(
+        w.astype(jnp.float32), cb)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_kmeans_full_loop_matches_core_solver():
+    """Kernel-backed Lloyd loop lands at the same codebook as the
+    searchsorted-based core solver."""
+    from repro.core.schemes.quantize import kmeans_1d, quantile_init
+    w = jax.random.normal(KEY, (8192,))
+    cb0 = quantile_init(w, 8)
+    cb_kernel, _ = kops.kmeans(w, cb0, iters=20, use_pallas=True)
+    cb_core, _ = kmeans_1d(w, cb0, iters=20)
+    np.testing.assert_allclose(np.asarray(cb_kernel),
+                               np.asarray(cb_core), atol=1e-3)
+
+
+# ----------------------------------------------------------------------
+# quant_matmul
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n,c", [
+    (8, 256, 128, 4), (64, 512, 256, 16), (17, 300, 129, 8),
+    (1, 1024, 512, 2), (128, 128, 128, 16),
+])
+def test_quant_matmul_vs_ref(m, k, n, c):
+    kx, ki, kc = jax.random.split(jax.random.fold_in(KEY, m * n + k), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    idx = jax.random.randint(ki, (k, n), 0, c).astype(jnp.uint8)
+    cb = jnp.sort(jax.random.normal(kc, (c,)))
+    y1 = qops.matmul(x, idx, cb, use_pallas=True)
+    y2 = qref.quant_matmul_ref(x, idx, cb)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_x_dtypes(dtype):
+    x = jax.random.normal(KEY, (16, 256)).astype(dtype)
+    idx = jax.random.randint(KEY, (256, 64), 0, 4).astype(jnp.uint8)
+    cb = jnp.array([-1.0, -0.3, 0.3, 1.0])
+    y1 = qops.matmul(x, idx, cb, use_pallas=True)
+    y2 = qref.quant_matmul_ref(x, idx, cb)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-2, atol=1e-1)
+
+
+def test_pack_quantized_roundtrip():
+    w = jax.random.normal(KEY, (64, 32))
+    cb = jnp.array([-1.5, -0.5, 0.5, 1.5])
+    idx = qops.pack_quantized(w, cb)
+    deq = cb[idx.astype(jnp.int32)]
+    # every entry maps to its nearest codebook value
+    d_direct = jnp.abs(w[..., None] - cb).min(-1)
+    np.testing.assert_allclose(np.asarray(jnp.abs(w - deq)),
+                               np.asarray(d_direct), atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# prune
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("p,kappa", [
+    (8192, 100), (5000, 2500), (1025, 1), (4096, 4095), (1024, 512),
+])
+def test_prune_topk_vs_ref(p, kappa):
+    w = jax.random.normal(jax.random.fold_in(KEY, p + kappa), (p,))
+    out = pops.topk_mask(w, kappa, use_pallas=True)
+    t = float(pref.topk_threshold_ref(w, kappa))
+    assert int(jnp.sum(out != 0)) == kappa
+    kept = np.abs(np.asarray(out))[np.asarray(out) != 0]
+    dropped = np.abs(np.asarray(w))[np.asarray(out) == 0]
+    # kept set is exactly the top-κ magnitudes (float-exact threshold)
+    assert kept.min() >= t * (1 - 1e-6)
+    assert dropped.max() <= t * (1 + 1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=999),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_prop_prune_kappa_exact(kappa, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (1000,))
+    out = pops.topk_mask(w, kappa, use_pallas=True)
+    assert int(jnp.sum(out != 0)) == kappa
+
+
+def test_prune_matrix_shape_preserved():
+    w = jax.random.normal(KEY, (32, 48))
+    out = pops.topk_mask(w, 100, use_pallas=True)
+    assert out.shape == w.shape
+    assert int(jnp.sum(out != 0)) == 100
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+from repro.kernels.flash_attention import ops as fops
+from repro.kernels.flash_attention import ref as fref
+
+
+@pytest.mark.parametrize("b,s,h,kvh,d,w,qc,kc", [
+    (2, 64, 4, 2, 16, 0, 16, 16),
+    (1, 128, 8, 8, 32, 24, 32, 16),
+    (2, 96, 6, 3, 16, 7, 32, 32),
+    (1, 32, 2, 1, 8, 0, 8, 8),
+])
+def test_flash_attention_vs_ref(b, s, h, kvh, d, w, qc, kc):
+    kq, kk, kv_ = jax.random.split(jax.random.fold_in(KEY, s + h), 3)
+    q = jax.random.normal(kq, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(kk, (b, s, kvh, d), jnp.float32)
+    v = jax.random.normal(kv_, (b, s, kvh, d), jnp.float32)
+    out = fops.attention(q, k, v, window=w, q_chunk=qc, kv_chunk=kc,
+                         use_pallas=True)
+    exp = fops.attention(q, k, v, window=w, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(KEY, (1, 32, 4, 16)).astype(dtype)
+    k = jax.random.normal(KEY, (1, 32, 2, 16)).astype(dtype)
+    v = jax.random.normal(KEY, (1, 32, 2, 16)).astype(dtype)
+    out = fops.attention(q, k, v, q_chunk=16, kv_chunk=16,
+                         use_pallas=True)
+    exp = fops.attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), use_pallas=False)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(exp), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_matches_model_blockwise():
+    """Kernel == the model's jnp blockwise path (the dry-run's fused-
+    scope accounting assumes identical math)."""
+    from repro.models.attention import blockwise_attention
+    kq, kk, kv_ = jax.random.split(KEY, 3)
+    q = jax.random.normal(kq, (2, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(kk, (2, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(kv_, (2, 64, 2, 16), jnp.float32)
+    pos = jnp.arange(64)
+    a = fops.attention(q, k, v, q_chunk=16, kv_chunk=16, use_pallas=True)
+    b_ = blockwise_attention(q, k, v, pos, pos, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,237 @@
+"""C-step scheme correctness: projection properties, known optima,
+distortion monotonicity (paper §7 monitors), and hypothesis properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schemes import (
+    AdaptiveQuantization, AdditiveCombination, Binarize,
+    ConstraintL0Pruning, ConstraintL1Pruning, LowRank, PenaltyL0Pruning,
+    PenaltyL1Pruning, RankSelection, Ternarize, optimal_codebook_dp,
+    project_l1_ball)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _w(n=4096, key=KEY):
+    return jax.random.normal(key, (n,))
+
+
+# ----------------------------------------------------------------------
+# Quantization
+# ----------------------------------------------------------------------
+def test_quant_distortion_decreases_with_k():
+    w = _w()
+    prev = np.inf
+    for k in (2, 4, 8, 32):
+        s = AdaptiveQuantization(k=k, iters=30)
+        d = float(s.distortion(w, s.init(w)))
+        assert d < prev
+        prev = d
+
+
+def test_quant_beats_fixed_binarization():
+    w = _w()
+    q = AdaptiveQuantization(k=2, iters=40)
+    b = Binarize(scaled=True)
+    assert float(q.distortion(w, q.init(w))) <= \
+        float(b.distortion(w, b.init(w))) + 1e-3
+
+
+def test_binarize_scale_is_mean_abs():
+    w = _w()
+    b = Binarize(scaled=True)
+    th = b.init(w)
+    np.testing.assert_allclose(float(th["scale"]),
+                               float(jnp.mean(jnp.abs(w))), rtol=1e-6)
+
+
+def test_ternarize_optimal_vs_sweep():
+    """Joint (support, scale) optimum must beat any manual support size."""
+    w = _w(512)
+    t = Ternarize()
+    d_opt = float(t.distortion(w, t.init(w)))
+    a = np.sort(np.abs(np.asarray(w)))[::-1]
+    for s in (16, 64, 128, 256, 511):
+        c = a[:s].mean()
+        d = float(((a[:s] - c) ** 2).sum() + (a[s:] ** 2).sum())
+        assert d_opt <= d + 1e-3
+
+
+def test_dp_matches_kmeans_at_convergence():
+    w = _w(8192)
+    cb_dp = optimal_codebook_dp(w, 4, bins=1024)
+    s = AdaptiveQuantization(k=4, iters=60)
+    cb_km = s.init(w).codebook
+    np.testing.assert_allclose(np.asarray(cb_dp), np.asarray(cb_km),
+                               atol=0.05)
+
+
+def test_kmeans_warm_start_monotone():
+    """compress() warm-started at previous Θ never increases distortion."""
+    w = _w()
+    s = AdaptiveQuantization(k=8, iters=3)
+    th = s.init(w)
+    d0 = float(s.distortion(w, th))
+    th2 = s.compress(w, th)
+    assert float(s.distortion(w, th2)) <= d0 + 1e-4
+
+
+# ----------------------------------------------------------------------
+# Pruning
+# ----------------------------------------------------------------------
+def test_l0_constraint_exact_support():
+    w = _w()
+    kappa = 123
+    s = ConstraintL0Pruning(kappa)
+    th = s.init(w)
+    assert int(jnp.sum(th["theta"] != 0)) == kappa
+    # kept entries are the κ largest
+    kept = np.sort(np.abs(np.asarray(th["theta"]))[
+        np.asarray(th["theta"]) != 0])
+    top = np.sort(np.abs(np.asarray(w)))[-kappa:]
+    np.testing.assert_allclose(kept, top)
+
+
+def test_l0_penalty_threshold():
+    w = _w()
+    s = PenaltyL0Pruning(alpha=1e-2)
+    mu = 0.5
+    th = s.compress(w, None, mu=mu)
+    t = np.sqrt(2 * s.alpha / mu)
+    mask = np.abs(np.asarray(w)) > t
+    np.testing.assert_array_equal(np.asarray(th["theta"] != 0), mask)
+
+
+def test_l1_penalty_soft_threshold():
+    w = _w()
+    s = PenaltyL1Pruning(alpha=0.05)
+    th = s.compress(w, None, mu=0.5)
+    expect = np.sign(np.asarray(w)) * np.maximum(
+        np.abs(np.asarray(w)) - 0.1, 0.0)
+    np.testing.assert_allclose(np.asarray(th["theta"]), expect, atol=1e-6)
+
+
+def test_l1_ball_projection():
+    w = _w(256)
+    r = 10.0
+    p = project_l1_ball(w, r)
+    assert float(jnp.sum(jnp.abs(p))) <= r * (1 + 1e-5)
+    # projection optimality: for any other feasible point, ||w-p|| smaller
+    q = p * 0.9
+    assert float(jnp.sum((w - p) ** 2)) <= float(jnp.sum((w - q) ** 2))
+
+
+def test_l1_ball_inside_is_identity():
+    w = jnp.array([0.1, -0.2, 0.3])
+    p = project_l1_ball(w, 10.0)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(w))
+
+
+# ----------------------------------------------------------------------
+# Low-rank
+# ----------------------------------------------------------------------
+def test_lowrank_matches_tail_energy():
+    w = jax.random.normal(KEY, (48, 32))
+    for r in (1, 4, 16):
+        s = LowRank(target_rank=r, randomized=False)
+        d = float(s.distortion(w, s.init(w)))
+        sv = np.linalg.svd(np.asarray(w), compute_uv=False)
+        np.testing.assert_allclose(d, float((sv[r:] ** 2).sum()),
+                                   rtol=1e-4)
+
+
+def test_randomized_svd_close_to_exact():
+    w = jax.random.normal(KEY, (256, 128))
+    s_ex = LowRank(target_rank=8, randomized=False)
+    s_r = LowRank(target_rank=8, randomized=True)
+    d_ex = float(s_ex.distortion(w, s_ex.init(w)))
+    d_r = float(s_r.distortion(w, s_r.init(w)))
+    assert d_r <= d_ex * 1.05  # oversampled + power iters ⇒ near-exact
+
+
+def test_rank_selection_monotone_in_alpha():
+    w = jax.random.normal(KEY, (64, 48))
+    ranks = []
+    for alpha in (1e-6, 1e-3, 1e-1, 10.0):
+        s = RankSelection(alpha=alpha)
+        th = s.compress(w, None, mu=1.0)
+        ranks.append(int(th["rank"]))
+    assert ranks == sorted(ranks, reverse=True)  # higher α ⇒ lower rank
+    assert ranks[0] > 0
+
+
+def test_rank_selection_mu_drives_rank_up():
+    w = jax.random.normal(KEY, (64, 48))
+    s = RankSelection(alpha=1e-3)
+    r_lo = int(s.compress(w, None, mu=0.01)["rank"])
+    r_hi = int(s.compress(w, None, mu=100.0)["rank"])
+    assert r_hi >= r_lo
+
+
+# ----------------------------------------------------------------------
+# Additive combinations
+# ----------------------------------------------------------------------
+def test_additive_beats_components():
+    w = _w(2048)
+    q = AdaptiveQuantization(k=2, iters=20)
+    p = ConstraintL0Pruning(kappa=64)
+    a = AdditiveCombination([p, q], iters=3)
+    d_a = float(a.distortion(w, a.init(w)))
+    d_q = float(q.distortion(w, q.init(w)))
+    d_p = float(p.distortion(w, p.init(w)))
+    assert d_a <= min(d_q, d_p) + 1e-3
+
+
+def test_additive_alternation_monotone():
+    w = _w(1024)
+    a = AdditiveCombination(
+        [ConstraintL0Pruning(kappa=32), AdaptiveQuantization(k=2)],
+        iters=1)
+    th = a.init(w)
+    d0 = float(a.distortion(w, th))
+    th = a.compress(w, th, mu=1.0)
+    assert float(a.distortion(w, th)) <= d0 + 1e-4
+
+
+# ----------------------------------------------------------------------
+# Hypothesis property tests
+# ----------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=16),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_prop_quant_projection_idempotent(k, seed):
+    """Π(Δ(Θ)) reproduces Θ's decompression exactly (projection)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (512,))
+    s = AdaptiveQuantization(k=k, iters=15)
+    th = s.init(w)
+    dec = s.decompress(th)
+    th2 = s.compress(dec, th)
+    np.testing.assert_allclose(np.asarray(s.decompress(th2)),
+                               np.asarray(dec), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=400),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_prop_l0_distortion_is_tail(kappa, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (512,))
+    s = ConstraintL0Pruning(kappa)
+    d = float(s.distortion(w, s.init(w)))
+    a = np.sort(np.abs(np.asarray(w)))
+    np.testing.assert_allclose(d, float((a[:-kappa] ** 2).sum()
+                                        if kappa < 512 else 0.0),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_prop_ternary_scale_nonneg(seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    t = Ternarize()
+    th = t.init(w)
+    assert float(th["scale"]) >= 0.0
+    d = float(t.distortion(w, th))
+    assert d <= float(jnp.sum(w**2)) + 1e-5  # never worse than all-zero
