@@ -5,6 +5,7 @@ from repro.core.tasks import (
     CompressionTask, flatten_params, get_path, set_path)
 from repro.core.views import AsVector, AsIs, AsMatrix, AsStacked
 from repro.core.penalty import lc_penalty, lc_penalty_grad_refs
+from repro.core.grouping import build_groups, describe_groups
 from repro.core import schemes
 
 __all__ = [
@@ -12,4 +13,5 @@ __all__ = [
     "CompressionTask", "flatten_params", "get_path", "set_path",
     "AsVector", "AsIs", "AsMatrix", "AsStacked",
     "lc_penalty", "lc_penalty_grad_refs", "schemes",
+    "build_groups", "describe_groups",
 ]

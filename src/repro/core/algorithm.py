@@ -11,10 +11,17 @@
 
 The L step is handed to the user as a *compiled step function + step
 count* (not an opaque Python loop) so the trainer can pjit it, checkpoint
-mid-L-step, and apply fault-tolerance policies. The C step is jitted and
-sharding-preserving; per-task C steps are independent and are dispatched
-together (JAX's async dispatch overlaps them — the paper's "C steps can be
-run in parallel" note).
+mid-L-step, and apply fault-tolerance policies.
+
+The C step is ONE jitted call. With ``group_tasks=True`` (default) the
+independent per-task projections are not merely traced side by side: tasks
+with equal ``scheme.group_key()`` and item shape are stacked along a
+leading axis and solved by a single vmapped scheme program per group
+(``core.grouping``) — the paper's "C steps can be run in parallel" note,
+realized as batched compute instead of N copies of the same HLO. The LC
+state buffers are donated to the C/multiplier steps on accelerators, so
+Θ/λ/a update in place. ``group_tasks=False`` keeps the legacy per-task
+trace for schemes that cannot be vmapped.
 """
 from __future__ import annotations
 
@@ -26,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import state as lcstate
+from repro.core.grouping import describe_groups, grouped_compress
 from repro.core.penalty import lc_penalty
 from repro.core.tasks import CompressionTask, check_disjoint, get_path
 from repro.core.views import AsVector
@@ -52,13 +60,31 @@ class LCAlgorithm:
                  mu_schedule: Sequence[float],
                  l_step: Callable | None = None,
                  eval_fn: Callable | None = None,
-                 jit_c_step: bool = True):
+                 jit_c_step: bool = True,
+                 group_tasks: bool = True,
+                 donate: bool | str = "auto"):
         self.tasks = list(tasks)
         self.mu_schedule = list(mu_schedule)
         self.l_step = l_step
         self.eval_fn = eval_fn
-        self._c_step = jax.jit(self._c_step_impl) if jit_c_step \
-            else self._c_step_impl
+        self.group_tasks = bool(group_tasks)
+        if donate == "auto":
+            # donation is a no-op (with a warning) on CPU; only ask for
+            # in-place Θ/λ/a updates where XLA implements aliasing.
+            donate = jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
+        dargs = (1,) if donate else ()
+        if jit_c_step:
+            self._c_step = jax.jit(self._c_step_impl, donate_argnums=dargs)
+            self._mult_step = jax.jit(self._multiplier_step_impl,
+                                      donate_argnums=dargs)
+            self._distortion = jax.jit(self._distortion_impl)
+            self._shifted_distortion = jax.jit(
+                self._shifted_distortion_impl)
+        else:
+            self._c_step = self._c_step_impl
+            self._mult_step = self._multiplier_step_impl
+            self._distortion = self._distortion_impl
+            self._shifted_distortion = self._shifted_distortion_impl
         self._resolved = False
 
     # ------------------------------------------------------------------
@@ -87,41 +113,61 @@ class LCAlgorithm:
         self.resolve(params)
         tasks_state = {}
         for t in self.tasks:
-            leaves = t.leaves(params)
-            x = t.view.to_compressible(leaves)
-            theta = t.scheme_init(x)
-            a_arr = t.scheme_decompress(theta)
-            a_leaves = t.view.from_compressible(a_arr, leaves)
-            a = {p: l.astype(jnp.float32)
-                 for p, l in zip(t.paths, a_leaves)}
-            lam = lcstate.zeros_like_leaves(t.paths, leaves)
+            theta = t.scheme_init(t.compressible(params))
+            a = t.scatter_decompressed(t.scheme_decompress(theta), params)
+            lam = lcstate.zeros_like_leaves(t.paths, t.leaves(params))
             tasks_state[t.name] = lcstate.task_state(theta, lam, a)
         return lcstate.lc_state(tasks_state, self.mu_schedule[0], k=0)
 
     # ------------------------------------------------------------------
     def _c_step_impl(self, params, lc):
+        if self.group_tasks:
+            return self._c_step_grouped(params, lc)
+        return self._c_step_pertask(params, lc)
+
+    def _c_step_pertask(self, params, lc):
+        """Legacy path: one scheme trace per task (`group_tasks=False`)."""
         mu = lc["mu"]
         new_tasks = {}
         for t in self.tasks:
             ts = lc["tasks"][t.name]
-            leaves = t.leaves(params)
-            shifted = [get_path(params, p).astype(jnp.float32)
-                       - ts["lam"][p] / mu for p in t.paths]
-            x = t.view.to_compressible(
-                [s.astype(l.dtype) for s, l in zip(shifted, leaves)])
+            x = t.shifted_compressible(params, ts, mu)
             theta = t.scheme_compress(x, ts["theta"], mu)
-            a_arr = t.scheme_decompress(theta)
-            a_leaves = t.view.from_compressible(a_arr, leaves)
-            a = {p: l.astype(jnp.float32)
-                 for p, l in zip(t.paths, a_leaves)}
+            a = t.scatter_decompressed(t.scheme_decompress(theta), params)
             new_tasks[t.name] = lcstate.task_state(theta, ts["lam"], a)
-        return {"tasks": new_tasks, "mu": mu, "k": lc["k"]}
+        return lcstate.with_tasks(lc, new_tasks)
+
+    def _c_step_grouped(self, params, lc):
+        """Grouped path: one vmapped scheme trace per (scheme, shape)
+        group — see ``core.grouping``. Bitwise-equivalent to the
+        per-task path (enforced by tests/test_grouped_cstep.py)."""
+        mu = lc["mu"]
+        xs = {t.name: t.shifted_compressible(params, lc["tasks"][t.name],
+                                             mu)
+              for t in self.tasks}
+        thetas = {t.name: lc["tasks"][t.name]["theta"]
+                  for t in self.tasks}
+        results = grouped_compress(self.tasks, xs, thetas, mu)
+        new_tasks = {}
+        for t in self.tasks:
+            theta, a_arr = results[t.name]
+            a = t.scatter_decompressed(a_arr, params)
+            new_tasks[t.name] = lcstate.task_state(
+                theta, lc["tasks"][t.name]["lam"], a)
+        return lcstate.with_tasks(lc, new_tasks)
 
     def c_step(self, params, lc) -> dict:
         return self._c_step(params, lc)
 
-    def multiplier_step(self, params, lc) -> dict:
-        """λ ← λ − μ(w − Δ(Θ)) (augmented Lagrangian; skip for QP)."""
+    def group_summary(self, params) -> list[dict]:
+        """The grouping the C step will use, from shapes only (no compute)."""
+        self.resolve(params)
+        xs = {t.name: jax.eval_shape(t.view.to_compressible,
+                                     t.leaves(params))
+              for t in self.tasks}
+        return describe_groups(self.tasks, xs)
+
+    def _multiplier_step_impl(self, params, lc):
         mu = lc["mu"]
         new_tasks = {}
         for t in self.tasks:
@@ -131,7 +177,11 @@ class LCAlgorithm:
                            - ts["a"][p])
                    for p in t.paths}
             new_tasks[t.name] = lcstate.task_state(ts["theta"], lam, ts["a"])
-        return {"tasks": new_tasks, "mu": mu, "k": lc["k"]}
+        return lcstate.with_tasks(lc, new_tasks)
+
+    def multiplier_step(self, params, lc) -> dict:
+        """λ ← λ − μ(w − Δ(Θ)) (augmented Lagrangian; skip for QP)."""
+        return self._mult_step(params, lc)
 
     def set_mu(self, lc, mu: float, k: int) -> dict:
         return {"tasks": lc["tasks"], "mu": jnp.float32(mu),
@@ -141,8 +191,7 @@ class LCAlgorithm:
     def penalty(self, params, lc) -> jnp.ndarray:
         return lc_penalty(params, lc, self.tasks)
 
-    def distortion(self, params, lc) -> dict[str, jnp.ndarray]:
-        """‖w − Δ(Θ)‖² per task — must decrease across C steps (§7)."""
+    def _distortion_impl(self, params, lc) -> dict[str, jnp.ndarray]:
         out = {}
         for t in self.tasks:
             ts = lc["tasks"][t.name]
@@ -152,6 +201,30 @@ class LCAlgorithm:
                 d = d + jnp.sum(diff * diff)
             out[t.name] = d
         return out
+
+    def distortion(self, params, lc) -> dict[str, jnp.ndarray]:
+        """‖w − Δ(Θ)‖² per task — must decrease across C steps (§7)."""
+        return self._distortion(params, lc)
+
+    def _shifted_distortion_impl(self, params, lc) -> dict[str, jnp.ndarray]:
+        out = {}
+        mu = lc["mu"]
+        for t in self.tasks:
+            ts = lc["tasks"][t.name]
+            x = t.shifted_compressible(params, ts, mu).astype(jnp.float32)
+            a = t.view.to_compressible(
+                [ts["a"][p] for p in t.paths]).astype(jnp.float32)
+            out[t.name] = jnp.sum((x - a) ** 2)
+        return out
+
+    def shifted_distortion(self, params, lc) -> dict[str, jnp.ndarray]:
+        """‖(w − λ/μ) − Δ(Θ)‖² per task — the exact C-step objective.
+
+        Unlike :meth:`distortion`, a warm-started C step is *guaranteed*
+        not to increase this at fixed (w, λ, μ) — the paper §7 monitor
+        the trainer checks around every C step.
+        """
+        return self._shifted_distortion(params, lc)
 
     def constraint_violation(self, params, lc) -> jnp.ndarray:
         """‖w − Δ(Θ)‖ over all tasks — the convergence monitor."""

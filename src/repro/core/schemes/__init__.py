@@ -1,4 +1,6 @@
-from repro.core.schemes.base import CompressionScheme
+from repro.core.schemes.base import (
+    CompressionScheme, add_leading_axis, drop_leading_axis, pack_thetas,
+    unpack_thetas)
 from repro.core.schemes.quantize import (
     AdaptiveQuantization, Binarize, Ternarize, kmeans_1d, quantile_init,
     optimal_codebook_dp)
@@ -10,7 +12,9 @@ from repro.core.schemes.lowrank import (
 from repro.core.schemes.additive import AdditiveCombination
 
 __all__ = [
-    "CompressionScheme", "AdaptiveQuantization", "Binarize", "Ternarize",
+    "CompressionScheme", "add_leading_axis", "drop_leading_axis",
+    "pack_thetas", "unpack_thetas",
+    "AdaptiveQuantization", "Binarize", "Ternarize",
     "kmeans_1d", "quantile_init", "optimal_codebook_dp",
     "ConstraintL0Pruning", "ConstraintL1Pruning", "PenaltyL0Pruning",
     "PenaltyL1Pruning", "topk_magnitude_mask", "project_l1_ball",

@@ -26,6 +26,12 @@ class AdditiveCombination(CompressionScheme):
         self.domain = ("matrix" if any(s.domain == "matrix" for s in schemes)
                        else "vector")
 
+    def group_key(self):
+        subs = tuple(s.group_key() for s in self.schemes)
+        if any(k is None for k in subs):
+            return None
+        return ("additive", self.iters, subs)
+
     def _to_domain(self, x, scheme):
         if scheme.domain == "vector" and x.ndim != 1:
             return x.ravel()

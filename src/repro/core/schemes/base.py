@@ -19,6 +19,7 @@ from __future__ import annotations
 
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 
 Theta = Any  # scheme-specific pytree
@@ -61,6 +62,23 @@ class CompressionScheme:
         return 2.0 * m * n
 
     # ------------------------------------------------------------------
+    def group_key(self) -> tuple | None:
+        """Static identity for grouped C-step dispatch (`core.grouping`).
+
+        Tasks whose schemes return equal, hashable keys — and whose views
+        produce items of the same shape/dtype — are stacked along a
+        leading axis and solved by ONE vmapped ``compress`` call inside
+        the single jitted C step. The key must therefore capture every
+        hyperparameter that changes the traced computation (κ, K, rank,
+        α, iteration counts, …).
+
+        Return ``None`` (the default) to opt out: the task then runs on
+        the per-task path even when grouping is enabled — the escape
+        hatch for exotic schemes whose compress is not vmappable.
+        """
+        return None
+
+    # ------------------------------------------------------------------
     def distortion(self, w: jnp.ndarray, theta: Theta) -> jnp.ndarray:
         """‖w − Δ(Θ)‖² — the C-step objective, used by monitors/tests."""
         d = w - self.decompress(theta)
@@ -69,3 +87,35 @@ class CompressionScheme:
     @property
     def name(self) -> str:
         return type(self).__name__
+
+
+# ----------------------------------------------------------------------
+# Stacked-Θ packing: grouped dispatch concatenates per-task Θ pytrees
+# along a leading item axis, vmaps the scheme over it, and slices the
+# result back. Works for any Θ pytree (dicts, NamedTuples, …).
+# ----------------------------------------------------------------------
+def add_leading_axis(theta: Theta) -> Theta:
+    """Θ for a single item → Θ with a length-1 leading item axis."""
+    return jax.tree_util.tree_map(lambda x: x[None], theta)
+
+
+def drop_leading_axis(theta: Theta) -> Theta:
+    """Inverse of :func:`add_leading_axis` (leading axis must be 1)."""
+    return jax.tree_util.tree_map(lambda x: x[0], theta)
+
+
+def pack_thetas(thetas: list[Theta]) -> Theta:
+    """Concatenate Θ pytrees (each carrying a leading item axis) along
+    axis 0 — the stacked Θ a grouped vmapped C step consumes."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *thetas)
+
+
+def unpack_thetas(packed: Theta, counts: list[int]) -> list[Theta]:
+    """Split a stacked Θ back into per-task Θs of ``counts`` items."""
+    out, off = [], 0
+    for n in counts:
+        out.append(jax.tree_util.tree_map(
+            lambda x, o=off, n=n: x[o:o + n], packed))
+        off += n
+    return out

@@ -52,6 +52,11 @@ class LowRank(CompressionScheme):
         self.rank = int(target_rank)
         self.randomized = randomized
 
+    def group_key(self):
+        # `randomized="auto"` resolves per item shape, but grouped items
+        # share a shape, so the key stays static within any group.
+        return ("lowrank", self.rank, self.randomized)
+
     def _use_rsvd(self, shape):
         if self.randomized == "auto":
             return min(shape) > 2048
@@ -98,6 +103,9 @@ class RankSelection(CompressionScheme):
         self.alpha = float(alpha)
         self.cost = cost
         self.max_rank = max_rank
+
+    def group_key(self):
+        return ("rank-selection", self.alpha, self.cost, self.max_rank)
 
     def _rmax(self, shape):
         r = min(shape)

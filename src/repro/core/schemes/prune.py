@@ -55,6 +55,9 @@ class ConstraintL0Pruning(CompressionScheme):
         assert kappa >= 1
         self.kappa = int(kappa)
 
+    def group_key(self):
+        return ("prune-l0", self.kappa)
+
     def init(self, w, key=None):
         return self.compress(w, None)
 
@@ -77,6 +80,9 @@ class ConstraintL1Pruning(CompressionScheme):
 
     def __init__(self, kappa: float):
         self.kappa = float(kappa)
+
+    def group_key(self):
+        return ("prune-l1", self.kappa)
 
     def init(self, w, key=None):
         return self.compress(w, None)
@@ -103,6 +109,9 @@ class PenaltyL0Pruning(CompressionScheme):
 
     def __init__(self, alpha: float):
         self.alpha = float(alpha)
+
+    def group_key(self):
+        return ("prune-penalty-l0", self.alpha)
 
     def init(self, w, key=None):
         # At init μ→0⁺ would prune everything; use the direct projection
@@ -132,6 +141,9 @@ class PenaltyL1Pruning(CompressionScheme):
 
     def __init__(self, alpha: float):
         self.alpha = float(alpha)
+
+    def group_key(self):
+        return ("prune-penalty-l1", self.alpha)
 
     def init(self, w, key=None):
         return {"theta": w}

@@ -27,6 +27,14 @@ def lc_state(tasks: dict, mu: float, k: int = 0) -> dict:
     return {"tasks": tasks, "mu": jnp.float32(mu), "k": jnp.int32(k)}
 
 
+def with_tasks(lc: dict, new_tasks: dict) -> dict:
+    """New LC state with ``tasks`` replaced, μ/k carried through — the
+    one-liner every C/multiplier step ends with (keeps the pytree layout
+    identical across the grouped and per-task paths, so checkpoints and
+    the trainer's penalty refs never notice which engine produced it)."""
+    return {"tasks": new_tasks, "mu": lc["mu"], "k": lc["k"]}
+
+
 def zeros_like_leaves(paths: list[str], leaves: list) -> dict:
     return {p: jnp.zeros(l.shape, jnp.float32)
             for p, l in zip(paths, leaves)}

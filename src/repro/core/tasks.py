@@ -13,6 +13,7 @@ from dataclasses import dataclass, field
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.schemes.base import CompressionScheme
 from repro.core.views import View
@@ -76,6 +77,41 @@ class CompressionTask:
 
     def leaves(self, params) -> list:
         return [get_path(params, p) for p in self.paths]
+
+    def compressible(self, params):
+        """x = view(w) — the array the scheme projects."""
+        return self.view.to_compressible(self.leaves(params))
+
+    def shifted_compressible(self, params, task_state, mu):
+        """x = view(w − λ/μ) — the C-step input (paper Fig. 2)."""
+        leaves = self.leaves(params)
+        shifted = [get_path(params, p).astype(jnp.float32)
+                   - task_state["lam"][p] / mu for p in self.paths]
+        return self.view.to_compressible(
+            [s.astype(l.dtype) for s, l in zip(shifted, leaves)])
+
+    def scatter_decompressed(self, a_arr, params) -> dict:
+        """Δ(Θ) in compressible shape → {path: f32 leaf} (the ``a`` refs)."""
+        a_leaves = self.view.from_compressible(a_arr, self.leaves(params))
+        return {p: l.astype(jnp.float32)
+                for p, l in zip(self.paths, a_leaves)}
+
+    def group_signature(self, x) -> tuple | None:
+        """Hashable grouping signature, or None when not groupable.
+
+        ``x`` may be a concrete array, a tracer, or a ShapeDtypeStruct —
+        only ``.shape``/``.dtype`` are read. Two tasks with equal
+        signatures are solved by one vmapped scheme call (see
+        ``core.grouping``).
+        """
+        key = self.scheme.group_key()
+        if key is None:
+            return None
+        # the scheme class is part of the identity: a subclass overriding
+        # compress() but inheriting group_key() must not merge with its
+        # parent (the group runs ONE scheme instance for all members)
+        return (type(self.scheme).__qualname__, key,
+                self.view.item_shape(x), str(x.dtype))
 
     # ---- scheme application, vmapped when the view is stacked ----------
     def scheme_init(self, x):

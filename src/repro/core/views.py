@@ -32,6 +32,25 @@ class View:
                           templates: list) -> list[jnp.ndarray]:
         raise NotImplementedError
 
+    # ---- item protocol (grouped C-step dispatch, `core.grouping`) ----
+    # A compressible array is a stack of *items*: stacked views carry
+    # their own leading item axis; single-array views are one item. The
+    # grouped engine concatenates items from shape-compatible tasks and
+    # vmaps the scheme once over the combined stack.
+    def to_items(self, arr: jnp.ndarray) -> jnp.ndarray:
+        """Compressible array → (n_items, *item_shape)."""
+        return arr if self.stacked else arr[None]
+
+    def from_items(self, items: jnp.ndarray) -> jnp.ndarray:
+        """Inverse of :meth:`to_items`."""
+        return items if self.stacked else items[0]
+
+    def item_count(self, arr) -> int:
+        return int(arr.shape[0]) if self.stacked else 1
+
+    def item_shape(self, arr) -> tuple:
+        return tuple(arr.shape[1:]) if self.stacked else tuple(arr.shape)
+
 
 class AsVector(View):
     def to_compressible(self, leaves):

@@ -113,7 +113,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
 
         print(compiled.memory_analysis())
-        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # jax ≤ 0.4.x: one dict per module
+            ca = ca[0] if ca else {}
+        print({k: v for k, v in ca.items()
                if k in ("flops", "bytes accessed")})
         terms = rl.analyze(compiled, arch=arch, shape=shape,
                            mesh_name=mesh_name, chips=chips,

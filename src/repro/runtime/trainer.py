@@ -44,6 +44,10 @@ class TrainerConfig:
     lr: float = 3e-4
     clip_norm: float = 1.0
     straggler_factor: float = 3.0
+    # paper §7 monitor: the C step must not increase its own objective
+    # ‖(w − λ/μ) − Δ(Θ)‖² at fixed (w, λ, μ); violations mean a broken
+    # scheme warm start and are logged as errors.
+    monitor_distortion: bool = True
 
 
 class LCTrainer:
@@ -131,6 +135,10 @@ class LCTrainer:
             if n_lc_steps else self.lc.mu_schedule
         global_step = int(state["step"])
 
+        for g in self.lc.group_summary(state["params"]):
+            log.info("c-step group: %s over %s (%d items, tasks=%s)",
+                     g["scheme"], g["item_shape"], g["items"], g["tasks"])
+
         for k, mu in enumerate(schedule):
             lc_state = self.lc.set_mu(lc_state, mu, k)
             state["lc"] = self._refs_from_lc(state["params"], lc_state)
@@ -140,7 +148,27 @@ class LCTrainer:
             global_step += self.tcfg.steps_per_l
 
             params = state["params"]
+            if self.tcfg.monitor_distortion:
+                d_pre = self.lc.shifted_distortion(params, lc_state)
+                jax.block_until_ready(d_pre)
+            # drain in-flight L-step work so c_step_ms times the C step
+            # alone, not the async dispatch chain behind it
+            jax.block_until_ready(params)
+            t0 = time.time()
             lc_state = self.lc.c_step(params, lc_state)
+            jax.block_until_ready(lc_state)
+            c_step_ms = (time.time() - t0) * 1e3
+            c_violations = []
+            if self.tcfg.monitor_distortion:
+                d_post = self.lc.shifted_distortion(params, lc_state)
+                for n in d_pre:
+                    pre, post = float(d_pre[n]), float(d_post[n])
+                    if post > pre * (1 + 1e-5) + 1e-8:
+                        c_violations.append(n)
+                        log.error(
+                            "C step increased ‖(w−λ/μ)−Δ(Θ)‖² for task "
+                            "%s: %.6g → %.6g (broken warm start?)",
+                            n, pre, post)
             lc_state = self.lc.multiplier_step(params, lc_state)
             state["lc"] = self._refs_from_lc(params, lc_state)
 
@@ -152,6 +180,8 @@ class LCTrainer:
                 "ce": float(metrics.get("ce", np.nan)),
                 "penalty_start": pen0,
                 "distortion": dist,
+                "c_step_ms": c_step_ms,
+                "c_step_violations": c_violations,
                 "compression_ratio": float(
                     self.lc.compression_ratio(params, lc_state)),
                 "stragglers": self.straggler.stragglers,

@@ -1,0 +1,263 @@
+"""Grouped C-step engine: grouped and per-task paths must produce
+numerically identical Θ/λ/a state; the grouped path must trace one
+scheme program per group (not per task); non-groupable schemes must
+fall through; Θ packing helpers must round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsIs, AsStacked, AsVector, CompressionTask, LCAlgorithm, build_groups,
+    exponential_mu_schedule)
+from repro.core.schemes import (
+    AdaptiveQuantization, AdditiveCombination, ConstraintL0Pruning,
+    LowRank, Ternarize, add_leading_axis, drop_leading_axis, pack_thetas,
+    unpack_thetas)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mixed_params(key=KEY, n_layers=4):
+    params = {
+        f"l{i}": {
+            "w": jax.random.normal(jax.random.fold_in(key, i), (32, 16)),
+            "p": jax.random.normal(jax.random.fold_in(key, 100 + i),
+                                   (512,)),
+        } for i in range(n_layers)}
+    params["stack"] = {
+        "w": jax.random.normal(jax.random.fold_in(key, 999), (3, 512))}
+    return params
+
+
+def _mixed_tasks():
+    return (
+        [CompressionTask(f"q{i}", rf"l{i}/w$", AsVector(),
+                         AdaptiveQuantization(k=4, iters=5))
+         for i in range(2)]
+        + [CompressionTask(f"pr{i}", rf"l{i}/p$", AsVector(),
+                           ConstraintL0Pruning(kappa=64))
+           for i in range(4)]
+        + [CompressionTask("lr", r"l[23]/w$", AsIs(),
+                           LowRank(2, randomized=False))]
+        + [CompressionTask("st", r"stack/w$", AsStacked("vector"),
+                           AdaptiveQuantization(k=4, iters=5))])
+
+
+def _make_lc(group_tasks):
+    return LCAlgorithm(_mixed_tasks(), exponential_mu_schedule(1e-2, 1.5, 3),
+                       group_tasks=group_tasks)
+
+
+# ----------------------------------------------------------------------
+# equivalence (acceptance criterion: identical Θ/λ/a on the same inputs)
+# ----------------------------------------------------------------------
+def test_grouped_equals_pertask_full_state():
+    params = _mixed_params()
+    lcg, lcp = _make_lc(True), _make_lc(False)
+    sg, sp = lcg.init(params), lcp.init(params)
+    # drift w so the C step actually moves Θ, then run C + multiplier
+    params2 = jax.tree_util.tree_map(
+        lambda x: x + 0.01 * jnp.sin(7 * x), params)
+    for _ in range(2):
+        sg = lcg.multiplier_step(params2, lcg.c_step(params2, sg))
+        sp = lcp.multiplier_step(params2, lcp.c_step(params2, sp))
+    flat_g = jax.tree_util.tree_leaves_with_path(sg)
+    flat_p = jax.tree_util.tree_leaves_with_path(sp)
+    assert len(flat_g) == len(flat_p)
+    for (kg, vg), (kp, vp) in zip(flat_g, flat_p):
+        assert kg == kp
+        np.testing.assert_array_equal(np.asarray(vg), np.asarray(vp),
+                                      err_msg=jax.tree_util.keystr(kg))
+
+
+def test_grouped_equals_pertask_stacked_only():
+    """A stacked view merged with singleton tasks of the same item shape
+    lands in one group and still matches the per-task vmap exactly."""
+    params = {"stack": jax.random.normal(KEY, (5, 256)),
+              "solo": jax.random.normal(jax.random.fold_in(KEY, 1), (256,))}
+    tasks = [
+        CompressionTask("st", r"^stack$", AsStacked("vector"),
+                        Ternarize()),
+        CompressionTask("so", r"^solo$", AsVector(), Ternarize()),
+    ]
+    lcg = LCAlgorithm(tasks, [1e-2], group_tasks=True)
+    lcp = LCAlgorithm([CompressionTask(t.name, t.pattern, t.view, t.scheme)
+                       for t in tasks], [1e-2], group_tasks=False)
+    sg = lcg.c_step(params, lcg.init(params))
+    sp = lcp.c_step(params, lcp.init(params))
+    for (kg, vg), (kp, vp) in zip(
+            jax.tree_util.tree_leaves_with_path(sg),
+            jax.tree_util.tree_leaves_with_path(sp)):
+        assert kg == kp
+        np.testing.assert_array_equal(np.asarray(vg), np.asarray(vp))
+
+
+# ----------------------------------------------------------------------
+# grouping structure
+# ----------------------------------------------------------------------
+def test_build_groups_merges_compatible_tasks():
+    params = _mixed_params()
+    lc = _make_lc(True)
+    summary = lc.group_summary(params)
+    # q0, q1 (one (512,) item each) + st (3 stacked items) share scheme
+    # config and item shape → one 5-item group
+    by_scheme = {g["scheme"]: g for g in summary}
+    assert by_scheme["AdaptiveQuantization"]["items"] == 5
+    assert set(by_scheme["AdaptiveQuantization"]["tasks"]) == \
+        {"q0", "q1", "st"}
+    assert by_scheme["ConstraintL0Pruning"]["items"] == 4
+    # the AsIs LowRank task was split per leaf at resolve, then regrouped
+    assert by_scheme["LowRank"]["items"] == 2
+    assert len(summary) == 3
+
+
+def test_different_hyperparams_do_not_group():
+    params = {"a": jax.random.normal(KEY, (128,)),
+              "b": jax.random.normal(KEY, (128,))}
+    tasks = [CompressionTask("a", "^a$", AsVector(),
+                             ConstraintL0Pruning(kappa=16)),
+             CompressionTask("b", "^b$", AsVector(),
+                             ConstraintL0Pruning(kappa=32))]
+    xs = {t.name: params[t.name] for t in tasks}
+    for t in tasks:
+        t.paths = [t.name]
+    groups = build_groups(tasks, xs)
+    assert len(groups) == 2
+
+
+def test_subclass_does_not_group_with_parent():
+    """A subclass overriding compress() but inheriting group_key() must
+    not merge with its parent class — the group runs ONE scheme for all
+    members."""
+    class TunedPrune(ConstraintL0Pruning):
+        def compress(self, w, theta, mu=None):  # different math
+            return {"theta": jnp.zeros_like(w)}
+
+    tasks = [CompressionTask("a", "^a$", AsVector(),
+                             ConstraintL0Pruning(kappa=16)),
+             CompressionTask("b", "^b$", AsVector(), TunedPrune(kappa=16))]
+    for t in tasks:
+        t.paths = [t.name]
+    xs = {"a": jax.random.normal(KEY, (128,)),
+          "b": jax.random.normal(KEY, (128,))}
+    assert len(build_groups(tasks, xs)) == 2
+
+
+def test_non_groupable_scheme_falls_through():
+    """group_key() defaults to None → singleton group, per-task trace,
+    identical numerics."""
+    class OptOutPrune(ConstraintL0Pruning):
+        def group_key(self):
+            return None
+
+    params = {"a": jax.random.normal(KEY, (128,)),
+              "b": jax.random.normal(jax.random.fold_in(KEY, 1), (128,))}
+    tasks = [CompressionTask("a", "^a$", AsVector(), OptOutPrune(kappa=16)),
+             CompressionTask("b", "^b$", AsVector(), OptOutPrune(kappa=16))]
+    lc = LCAlgorithm(tasks, [1e-2], group_tasks=True)
+    assert all(len(g["tasks"]) == 1 for g in lc.group_summary(params))
+    st = lc.c_step(params, lc.init(params))
+    ref = ConstraintL0Pruning(kappa=16)
+    np.testing.assert_array_equal(
+        np.asarray(st["tasks"]["a"]["theta"]["theta"]),
+        np.asarray(ref.compress(params["a"], None)["theta"]))
+
+
+def test_additive_group_key_composes():
+    a1 = AdditiveCombination(
+        [ConstraintL0Pruning(8), AdaptiveQuantization(k=2, iters=3)])
+    a2 = AdditiveCombination(
+        [ConstraintL0Pruning(8), AdaptiveQuantization(k=2, iters=3)])
+    a3 = AdditiveCombination(
+        [ConstraintL0Pruning(9), AdaptiveQuantization(k=2, iters=3)])
+    assert a1.group_key() == a2.group_key()
+    assert a1.group_key() != a3.group_key()
+
+    class Exotic(ConstraintL0Pruning):
+        def group_key(self):
+            return None
+
+    assert AdditiveCombination(
+        [Exotic(8), AdaptiveQuantization(k=2)]).group_key() is None
+
+
+# ----------------------------------------------------------------------
+# single-jit / single-trace property
+# ----------------------------------------------------------------------
+def test_grouped_traces_scheme_once_per_group():
+    """Four same-config prune tasks: grouped path traces compress once
+    (inside one vmap); per-task traces it four times."""
+    class CountingPrune(ConstraintL0Pruning):
+        traces = 0
+
+        def compress(self, w, theta, mu=None):
+            CountingPrune.traces += 1
+            return super().compress(w, theta, mu=mu)
+
+    params = {f"p{i}": jax.random.normal(jax.random.fold_in(KEY, i), (64,))
+              for i in range(4)}
+
+    def run(group_tasks):
+        scheme = CountingPrune(kappa=8)
+        tasks = [CompressionTask(f"t{i}", f"^p{i}$", AsVector(), scheme)
+                 for i in range(4)]
+        lc = LCAlgorithm(tasks, [1e-2], group_tasks=group_tasks)
+        st = lc.init(params)
+        CountingPrune.traces = 0
+        jax.block_until_ready(lc.c_step(params, st))
+        return CountingPrune.traces
+
+    assert run(group_tasks=True) == 1
+    assert run(group_tasks=False) == 4
+
+
+def test_c_step_is_single_jitted_callable():
+    lc = _make_lc(True)
+    params = _mixed_params()
+    st = lc.init(params)
+    # one compiled executable serves the whole C step
+    lowered = jax.jit(lc._c_step_impl).lower(params, st)
+    assert lowered.compile() is not None
+
+
+# ----------------------------------------------------------------------
+# Θ packing helpers
+# ----------------------------------------------------------------------
+def test_pack_unpack_theta_roundtrip():
+    mk = lambda i, n: {"u": jnp.full((n, 3), float(i)),
+                       "r": jnp.arange(n) + 10 * i}
+    thetas = [mk(1, 2), mk(2, 1), mk(3, 3)]
+    packed = pack_thetas(thetas)
+    assert packed["u"].shape == (6, 3)
+    back = unpack_thetas(packed, [2, 1, 3])
+    for orig, rt in zip(thetas, back):
+        np.testing.assert_array_equal(np.asarray(orig["u"]),
+                                      np.asarray(rt["u"]))
+        np.testing.assert_array_equal(np.asarray(orig["r"]),
+                                      np.asarray(rt["r"]))
+
+
+def test_add_drop_leading_axis_roundtrip():
+    th = {"a": jnp.ones((4, 2)), "b": jnp.zeros((3,))}
+    up = add_leading_axis(th)
+    assert up["a"].shape == (1, 4, 2) and up["b"].shape == (1, 3)
+    down = drop_leading_axis(up)
+    np.testing.assert_array_equal(np.asarray(down["a"]),
+                                  np.asarray(th["a"]))
+
+
+def test_namedtuple_theta_packs():
+    """QuantTheta (NamedTuple) must survive pack/unpack — the grouped
+    engine relies on Θ being an arbitrary pytree."""
+    s = AdaptiveQuantization(k=2, iters=3)
+    w1 = jax.random.normal(KEY, (64,))
+    w2 = jax.random.normal(jax.random.fold_in(KEY, 1), (64,))
+    t1, t2 = s.init(w1), s.init(w2)
+    packed = pack_thetas([add_leading_axis(t1), add_leading_axis(t2)])
+    assert packed.codebook.shape == (2, 2)
+    back = [drop_leading_axis(t) for t in unpack_thetas(packed, [1, 1])]
+    np.testing.assert_array_equal(np.asarray(back[0].assign),
+                                  np.asarray(t1.assign))
+    np.testing.assert_array_equal(np.asarray(back[1].codebook),
+                                  np.asarray(t2.codebook))

@@ -171,6 +171,47 @@ def test_flash_attention_dtypes(dtype):
                                np.asarray(exp), rtol=3e-2, atol=3e-2)
 
 
+@pytest.mark.parametrize("window", [0, 24])
+def test_flash_attention_kernel_vs_ref_direct(window):
+    """The Pallas kernel (interpret mode) against the pure-jnp oracle in
+    the kernel's own (B, KV, G, S, D) layout — no wrapper in between."""
+    from repro.kernels.flash_attention.flash_attention import \
+        flash_attention
+    kq, kk, kv_ = jax.random.split(jax.random.fold_in(KEY, 77), 3)
+    q = jax.random.normal(kq, (2, 2, 3, 64, 16), jnp.float32)
+    k = jax.random.normal(kk, (2, 2, 64, 16), jnp.float32)
+    v = jax.random.normal(kv_, (2, 2, 64, 16), jnp.float32)
+    out = flash_attention(q, k, v, window=window, q_chunk=16, kv_chunk=16,
+                          interpret=True)
+    exp = fref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_kmeans_lloyd_step_vs_ref():
+    w = jax.random.normal(KEY, (8192,))
+    cb = jnp.sort(jax.random.normal(jax.random.fold_in(KEY, 3), (16,)))
+    new_k = kops.lloyd_step(w, cb, use_pallas=True)
+    new_r = kref.lloyd_step_ref(w, cb)
+    np.testing.assert_allclose(np.asarray(new_k), np.asarray(jnp.sort(new_r)),
+                               rtol=3e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("t", [0.1, 0.7, 2.5])
+def test_prune_count_mask_kernels_vs_ref(t):
+    from repro.kernels.prune.prune import (
+        LANES, ROWS, count_above, mask_apply)
+    w = jax.random.normal(jax.random.fold_in(KEY, 11),
+                          (4 * ROWS * LANES,))
+    tj = jnp.float32(t)
+    np.testing.assert_allclose(
+        float(count_above(w, tj, interpret=True)),
+        float(pref.count_above_ref(w, tj)), rtol=0)
+    np.testing.assert_allclose(
+        np.asarray(mask_apply(w, tj, interpret=True)),
+        np.asarray(pref.mask_apply_ref(w, tj)), rtol=0)
+
+
 def test_flash_attention_matches_model_blockwise():
     """Kernel == the model's jnp blockwise path (the dry-run's fused-
     scope accounting assumes identical math)."""
