@@ -22,6 +22,7 @@ from repro.core.schemes import (
     optimal_codebook_dp)
 from repro.kernels.kmeans import ops as kops
 from repro.kernels.prune import ops as pops
+from repro.launch.mesh import make_cstep_mesh
 
 
 def _time(fn, *args, reps=3):
@@ -48,7 +49,7 @@ def _grouped_vs_pertask(n_layers: int = 6, p_quant: int = 1 << 15,
                                    (p_prune,)),
         } for i in range(n_layers)}
 
-    def make(group_tasks):
+    def make(group_tasks, mesh=None):
         tasks = (
             [CompressionTask(f"q{i}", rf"l{i}/w$", AsVector(),
                              AdaptiveQuantization(k=16, iters=10))
@@ -59,13 +60,21 @@ def _grouped_vs_pertask(n_layers: int = 6, p_quant: int = 1 << 15,
         # donate=False: the bench reuses `st` across repetitions, which
         # donated buffers would forbid on accelerators
         return LCAlgorithm(tasks, exponential_mu_schedule(1e-2, 1.2, 2),
-                           group_tasks=group_tasks, donate=False)
+                           group_tasks=group_tasks, donate=False,
+                           mesh=mesh)
 
     schedule_len = 30        # μ steps in a paper-realistic LC run
+    # sharded column: items axes split over every local device ("data");
+    # on a 1-device host this degrades to an annotated (1,1)-mesh no-op
+    # but still measures the constraint/padding overhead of the path.
+    mesh = make_cstep_mesh()
+    n_data = mesh.devices.shape[0]
     rows = []
     results = {}
-    for label, group in (("grouped", True), ("pertask", False)):
-        lc = make(group)
+    for label, group, m in (("grouped", True, None),
+                            ("pertask", False, None),
+                            (f"sharded-data{n_data}", True, mesh)):
+        lc = make(group, m)
         st = lc.init(params)
         t0 = time.time()
         out = lc.c_step(params, st)
@@ -75,21 +84,30 @@ def _grouped_vs_pertask(n_layers: int = 6, p_quant: int = 1 << 15,
         # one compile per LC run (μ is a traced scalar), then one C step
         # per μ — the cost an actual `LCAlgorithm.run` pays:
         lc_run_ms = first_call_ms + (schedule_len - 1) * us / 1e3
-        results[label] = lc_run_ms
+        results["sharded" if m is not None else label] = lc_run_ms
         n_groups = len(lc.group_summary(params)) if group \
             else len(lc.tasks)
+        layout = "" if m is None else " " + "; ".join(
+            f"spec={g['spec']} pad={g['padding']}"
+            for g in lc.group_summary(params) if g["grouped"])
         rows.append({
             "name": f"cstep/dispatch-{label}/tasks={2 * n_layers}",
             "us_per_call": us,
             "derived": f"compile+first={first_call_ms:.0f}ms "
                        f"lc_run({schedule_len} mu)={lc_run_ms:.0f}ms "
-                       f"traced_programs={n_groups}"})
+                       f"traced_programs={n_groups}{layout}"})
     speedup = results["pertask"] / max(results["grouped"], 1e-9)
     rows.append({
         "name": f"cstep/dispatch-speedup/tasks={2 * n_layers}",
         "us_per_call": speedup,
         "derived": f"lc_run total x{speedup:.2f} "
                    f"(grouped wins: {speedup > 1.0})"})
+    shard_x = results["grouped"] / max(results["sharded"], 1e-9)
+    rows.append({
+        "name": f"cstep/dispatch-sharded-vs-replicated/data={n_data}",
+        "us_per_call": shard_x,
+        "derived": f"lc_run grouped/sharded x{shard_x:.2f} "
+                   f"(devices={n_data})"})
     return rows
 
 

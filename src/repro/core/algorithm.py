@@ -62,18 +62,30 @@ class LCAlgorithm:
                  eval_fn: Callable | None = None,
                  jit_c_step: bool = True,
                  group_tasks: bool = True,
-                 donate: bool | str = "auto"):
+                 donate: bool | str = "auto",
+                 mesh=None,
+                 sharding_rules: dict | None = None):
         self.tasks = list(tasks)
         self.mu_schedule = list(mu_schedule)
         self.l_step = l_step
         self.eval_fn = eval_fn
         self.group_tasks = bool(group_tasks)
+        self.mesh = mesh
+        self.sharding_rules = sharding_rules
         if donate == "auto":
             # donation is a no-op (with a warning) on CPU; only ask for
             # in-place Θ/λ/a updates where XLA implements aliasing.
             donate = jax.default_backend() in ("tpu", "gpu", "cuda", "rocm")
-        dargs = (1,) if donate else ()
-        if jit_c_step:
+        self._jit_c_step = bool(jit_c_step)
+        self._donate = bool(donate)
+        self._build_steps()
+        self._resolved = False
+
+    def _build_steps(self):
+        """(Re)wrap the step impls in jit; called again by set_mesh so a
+        late-bound mesh invalidates any already-compiled executables."""
+        dargs = (1,) if self._donate else ()
+        if self._jit_c_step:
             self._c_step = jax.jit(self._c_step_impl, donate_argnums=dargs)
             self._mult_step = jax.jit(self._multiplier_step_impl,
                                       donate_argnums=dargs)
@@ -85,7 +97,20 @@ class LCAlgorithm:
             self._mult_step = self._multiplier_step_impl
             self._distortion = self._distortion_impl
             self._shifted_distortion = self._shifted_distortion_impl
-        self._resolved = False
+
+    def set_mesh(self, mesh, rules: dict | None = None) -> "LCAlgorithm":
+        """Bind the device mesh the grouped C step shards over.
+
+        The mesh is static trace-time state (it picks the sharding
+        constraints baked into the C-step HLO), so the jitted steps are
+        rebuilt — safe to call any time, typically right after
+        construction by the trainer that owns the mesh.
+        """
+        self.mesh = mesh
+        if rules is not None:
+            self.sharding_rules = rules
+        self._build_steps()
+        return self
 
     # ------------------------------------------------------------------
     def resolve(self, params):
@@ -139,15 +164,20 @@ class LCAlgorithm:
 
     def _c_step_grouped(self, params, lc):
         """Grouped path: one vmapped scheme trace per (scheme, shape)
-        group — see ``core.grouping``. Bitwise-equivalent to the
-        per-task path (enforced by tests/test_grouped_cstep.py)."""
+        group — see ``core.grouping``. With ``self.mesh`` set, each
+        group's packed item axis is sharded over the mesh's data axis.
+        Bitwise-equivalent to the per-task path and to ``mesh=None``
+        (enforced by tests/test_grouped_cstep.py and
+        tests/test_sharded_cstep.py)."""
         mu = lc["mu"]
         xs = {t.name: t.shifted_compressible(params, lc["tasks"][t.name],
                                              mu)
               for t in self.tasks}
         thetas = {t.name: lc["tasks"][t.name]["theta"]
                   for t in self.tasks}
-        results = grouped_compress(self.tasks, xs, thetas, mu)
+        results = grouped_compress(self.tasks, xs, thetas, mu,
+                                   mesh=self.mesh,
+                                   rules=self.sharding_rules)
         new_tasks = {}
         for t in self.tasks:
             theta, a_arr = results[t.name]
@@ -165,7 +195,12 @@ class LCAlgorithm:
         xs = {t.name: jax.eval_shape(t.view.to_compressible,
                                      t.leaves(params))
               for t in self.tasks}
-        return describe_groups(self.tasks, xs)
+        # group_tasks=False runs the unsharded per-task path, so don't
+        # report a layout that will never be applied
+        return describe_groups(self.tasks, xs,
+                               mesh=self.mesh if self.group_tasks
+                               else None,
+                               rules=self.sharding_rules)
 
     def _multiplier_step_impl(self, params, lc):
         mu = lc["mu"]

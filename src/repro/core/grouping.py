@@ -18,6 +18,18 @@ Everything here runs at trace time inside the single jitted ``c_step`` —
 the Python loops cost nothing at runtime, and the resulting HLO contains
 one scheme program per *group* instead of per *task*.
 
+With a ``mesh``, the packed item axis is additionally annotated with the
+``"items"`` logical sharding rule (``distributed/sharding.py``, default
+candidates ``[("data",), ()]``): the stacked items are embarrassingly
+parallel, so GSPMD splits the vmapped scheme program across the data
+axis — a 64-layer group's C step runs data-parallel. Item counts that
+don't divide the data axis are zero-padded up to the next multiple
+(padded lanes are computed and discarded; vmap lanes are independent, so
+the surviving slices are bit-identical to the unsharded result), and the
+per-task Θ/Δ(Θ) slices are re-constrained with each task's own item
+count so they land where the L step consumes them. ``mesh=None``
+(default) is exactly the pre-mesh path.
+
 Tasks whose scheme opts out (``group_key() is None``) fall through to
 the per-task path unchanged, so exotic schemes need no vmap support.
 """
@@ -27,10 +39,13 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.schemes.base import (
     add_leading_axis, drop_leading_axis, pack_thetas, unpack_thetas)
 from repro.core.tasks import CompressionTask
+from repro.distributed.sharding import (
+    items_partition, shard_map, stacked_sharding)
 
 
 def build_groups(tasks: Sequence[CompressionTask],
@@ -56,31 +71,72 @@ def build_groups(tasks: Sequence[CompressionTask],
     return [groups[s] for s in order] + solos
 
 
-def describe_groups(tasks: Sequence[CompressionTask],
-                    xs: dict) -> list[dict]:
-    """Human/bench-readable summary of the grouping a C step would use."""
+def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
+                    mesh: Mesh | None = None,
+                    rules: dict | None = None) -> list[dict]:
+    """Human/bench-readable summary of the grouping a C step would use.
+
+    With a ``mesh``, each entry also reports how the packed item axis
+    would be laid out: ``spec`` is the PartitionSpec of the stacked
+    leading axis (``None`` whenever the axis is not sharded — no mesh,
+    per-task path, or replication fallback) and ``padding`` is the
+    number of zero items appended so the count divides the assigned
+    mesh axes (0 when it already divides, or when not sharded).
+    """
     out = []
     for group in build_groups(tasks, xs):
         t0 = group[0]
         sig = t0.group_signature(xs[t0.name])
+        grouped = sig is not None and len(group) > 1
+        n_items = sum(t.view.item_count(xs[t.name]) for t in group)
+        spec, pad = None, 0
+        if mesh is not None and grouped:
+            entry, pad = items_partition(n_items, mesh, rules)
+            spec = P(entry) if entry is not None else None
         out.append({
             "scheme": t0.scheme.name,
             "item_shape": t0.view.item_shape(xs[t0.name]),
             "tasks": [t.name for t in group],
-            "items": sum(t.view.item_count(xs[t.name]) for t in group),
+            "items": n_items,
             # singleton groups run the per-task path even when groupable
-            "grouped": sig is not None and len(group) > 1,
+            "grouped": grouped,
+            "spec": spec,
+            "padding": pad,
         })
     return out
 
 
+def _pad_leading(x, pad: int):
+    """Append ``pad`` zero items along axis 0 (the vmapped item axis)."""
+    return jnp.concatenate(
+        [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+
+def _constrain_leading(tree, mesh, entry):
+    """with_sharding_constraint splitting only the leading axis."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.with_sharding_constraint(
+            x, stacked_sharding(mesh, entry, x.ndim)), tree)
+
+
+def _constrain_replicated(tree, mesh):
+    """with_sharding_constraint pinning every leaf fully replicated."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P())), tree)
+
+
 def grouped_compress(tasks: Sequence[CompressionTask], xs: dict,
-                     thetas: dict, mu) -> dict:
+                     thetas: dict, mu, mesh: Mesh | None = None,
+                     rules: dict | None = None) -> dict:
     """One C step over all tasks with grouped vmap dispatch.
 
     Returns ``{task_name: (new_theta, a_arr)}`` where ``a_arr`` is the
     decompressed Δ(Θ) in the task's compressible shape. Must be called
     under jit (it is trace-time machinery, not a runtime scheduler).
+    With a ``mesh``, the packed item axis of every multi-task group is
+    sharded per the ``"items"`` rule — see the module docstring; the
+    numerics are unchanged.
     """
     out = {}
     for group in build_groups(tasks, xs):
@@ -99,16 +155,62 @@ def grouped_compress(tasks: Sequence[CompressionTask], xs: dict,
             thetas[t.name] if t.view.stacked
             else add_leading_axis(thetas[t.name]) for t in group])
 
-        new_packed = jax.vmap(
-            lambda xi, ti: scheme.compress(xi, ti, mu=mu))(items, packed)
-        a_packed = jax.vmap(scheme.decompress)(new_packed)
-
         counts = [t.view.item_count(xs[t.name]) for t in group]
+        n_items = sum(counts)
+        entry, pad = (None, 0)
+        if mesh is not None:
+            entry, pad = items_partition(n_items, mesh, rules)
+
+        def _solve(xi, ti):
+            nt = jax.vmap(
+                lambda x, th: scheme.compress(x, th, mu=mu))(xi, ti)
+            return nt, jax.vmap(scheme.decompress)(nt)
+
+        if entry is not None:
+            # padded lanes are independent vmap lanes computed and
+            # discarded, so the surviving slices match mesh=None exactly
+            if pad:
+                items = _pad_leading(items, pad)
+                packed = jax.tree_util.tree_map(
+                    lambda x: _pad_leading(x, pad), packed)
+            # enter the shard_map boundary from an explicit replicated
+            # layout: on jax 0.4.x GSPMD's reshard-into-manual from a
+            # dim-sharded concatenate miscompiles (the output comes back
+            # psummed over the unmentioned mesh axes), while
+            # replicated → manual slices correctly.
+            items = _constrain_replicated(items, mesh)
+            packed = _constrain_replicated(packed, mesh)
+            # shard_map, not bare GSPMD: each device vmaps the scheme
+            # over its local items, so schemes built on custom calls
+            # (LAPACK svd/qr) partition correctly — the SPMD partitioner
+            # has no rule for those and miscompiles sliced uses.
+            spec = P(entry)
+            new_packed, a_packed = shard_map(
+                _solve, mesh, in_specs=(spec, spec),
+                out_specs=(spec, spec))(items, packed)
+        else:
+            new_packed, a_packed = _solve(items, packed)
+
+        if pad:
+            new_packed = jax.tree_util.tree_map(
+                lambda x: x[:n_items], new_packed)
+            a_packed = a_packed[:n_items]
+
         theta_parts = unpack_thetas(new_packed, counts)
         off = 0
         for t, th, n in zip(group, theta_parts, counts):
             a_arr = t.view.from_items(a_packed[off:off + n])
             off += n
-            out[t.name] = (th if t.view.stacked else drop_leading_axis(th),
-                           a_arr)
+            if not t.view.stacked:
+                th = drop_leading_axis(th)
+            elif mesh is not None:
+                # land the sliced stack where the L step consumes it:
+                # the task's own item count decides its spec (exact
+                # divisibility only — slices can't be padded)
+                t_entry, _ = items_partition(n, mesh, rules,
+                                             allow_pad=False)
+                if t_entry is not None:
+                    th = _constrain_leading(th, mesh, t_entry)
+                    a_arr = _constrain_leading(a_arr, mesh, t_entry)
+            out[t.name] = (th, a_arr)
     return out

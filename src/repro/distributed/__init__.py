@@ -1,8 +1,9 @@
 from repro.distributed.sharding import (
-    DEFAULT_RULES, active_mesh, batch_axes, constrain, resolve_spec,
-    tree_shardings, use_mesh)
+    DEFAULT_RULES, active_mesh, batch_axes, constrain, items_partition,
+    resolve_spec, stacked_sharding, tree_shardings, use_mesh)
 
 __all__ = [
     "DEFAULT_RULES", "active_mesh", "batch_axes", "constrain",
-    "resolve_spec", "tree_shardings", "use_mesh",
+    "items_partition", "resolve_spec", "stacked_sharding",
+    "tree_shardings", "use_mesh",
 ]

@@ -21,6 +21,19 @@ import threading
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.7: public API, kwarg `check_vma`
+    _shard_map = jax.shard_map
+    _SM_CHECK_KW = "check_vma"
+except AttributeError:  # jax 0.4.x: experimental module, kwarg `check_rep`
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_CHECK_KW = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma=False):
+    """Version-tolerant ``shard_map`` (jax 0.4.x ↔ ≥0.7 signature drift)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_SM_CHECK_KW: check_vma})
+
 # candidates: tuples of mesh axis names (joint sharding) tried in order;
 # () means replicate.
 DEFAULT_RULES: dict[str, list[tuple[str, ...]]] = {
@@ -41,6 +54,9 @@ DEFAULT_RULES: dict[str, list[tuple[str, ...]]] = {
     # sequence axes
     "kv_seq":      [("model",), ("data",), ()],
     "seq":         [()],
+    # packed leading item axis of a grouped C step (core/grouping.py):
+    # the stacked items are embarrassingly parallel, so they data-shard
+    "items":       [("data",), ()],
     # never sharded
     "layers":      [()],
     "state":       [()],
@@ -61,8 +77,9 @@ SERVE_RULES = None  # initialized below
 
 # greedy assignment priority (earlier names grab mesh axes first)
 PRIORITY = [
-    "experts", "batch", "heads_flat", "kv_flat", "heads", "kv_heads",
-    "mlp", "vocab", "inner", "embed", "embed_pod", "kv_seq", "seq",
+    "experts", "items", "batch", "heads_flat", "kv_flat", "heads",
+    "kv_heads", "mlp", "vocab", "inner", "embed", "embed_pod", "kv_seq",
+    "seq",
 ]
 
 
@@ -102,6 +119,47 @@ def resolve_spec(names: tuple, shape: tuple, mesh: Mesh,
             used.update(cand)
             break
     return P(*entries)
+
+
+# ----------------------------------------------------------------------
+# Packed-item axis of the grouped C step (core/grouping.py). Unlike
+# resolve_spec — which can only fall back to replication when a dim
+# doesn't divide the mesh axis — an item stack may be *padded*: the items
+# are independent (the scheme is vmapped over them), so extra zero items
+# change nothing but the shard shapes.
+# ----------------------------------------------------------------------
+def items_partition(n_items: int, mesh: Mesh, rules: dict | None = None,
+                    allow_pad: bool = True) -> tuple:
+    """Resolve the ``"items"`` logical axis for a packed stack of
+    ``n_items``.
+
+    Returns ``(entry, pad)``: ``entry`` is the PartitionSpec entry for
+    the leading axis (a mesh-axis name, a tuple of them, or ``None`` for
+    replicate) and ``pad`` is how many zero items to append so the padded
+    count divides the assigned mesh axes. With ``allow_pad=False`` only
+    exact divisibility shards (used for per-task output specs, where the
+    slice must keep the task's true item count).
+    """
+    rules = rules or DEFAULT_RULES
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for cand in rules.get("items", [()]):
+        if not cand:
+            return None, 0
+        if not all(a in mesh_sizes for a in cand):
+            continue
+        prod = 1
+        for a in cand:
+            prod *= mesh_sizes[a]
+        pad = (-n_items) % prod
+        if pad and not allow_pad:
+            continue
+        return (cand if len(cand) > 1 else cand[0]), pad
+    return None, 0
+
+
+def stacked_sharding(mesh: Mesh, entry, ndim: int) -> NamedSharding:
+    """NamedSharding that splits only the leading (item) axis."""
+    return NamedSharding(mesh, P(entry, *([None] * (ndim - 1))))
 
 
 # ----------------------------------------------------------------------

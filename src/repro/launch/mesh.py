@@ -23,3 +23,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh for CPU tests/examples (1 device)."""
     return jax.make_mesh(shape, axes)
+
+
+def make_cstep_mesh(n_data: int | None = None):
+    """Data-only mesh for the sharded grouped C step.
+
+    The C step's packed item axes shard over "data"
+    (``distributed/sharding.py`` rule ``"items"``), so a bench or test
+    that only exercises the C step wants every local device on that
+    axis. Defaults to all visible devices; on a forced-host-device CPU
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) that is the
+    8 fake devices, on a real single-device CPU it degrades to (1, 1)
+    and the sharded path becomes an annotated no-op.
+    """
+    n = n_data if n_data is not None else len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -26,22 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-try:  # jax ≥ 0.6: top-level export, replication check is `check_vma`
-    _shard_map = jax.shard_map
-    _SM_CHECK_KW = "check_vma"
-except AttributeError:  # jax 0.4.x: experimental module, kwarg `check_rep`
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _SM_CHECK_KW = "check_rep"
-
-
-def shard_map(f, mesh, in_specs, out_specs, check_vma=False):
-    return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, **{_SM_CHECK_KW: check_vma})
-
-
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import batch_axes
+from repro.distributed.sharding import batch_axes, shard_map
 from repro.models.layers import dense_init
 
 

@@ -59,6 +59,10 @@ class LCTrainer:
         self.lc = lc
         self.data = data
         self.mesh = mesh
+        if mesh is not None and lc.mesh is None:
+            # the trainer owns the mesh: hand it to the algorithm so the
+            # grouped C step shards its packed item axes over "data"
+            lc.set_mesh(mesh)
         self.tcfg = tcfg or TrainerConfig()
         self.optimizer = optimizer or AdamW()
         self.retry = RetryPolicy()
@@ -136,8 +140,10 @@ class LCTrainer:
         global_step = int(state["step"])
 
         for g in self.lc.group_summary(state["params"]):
-            log.info("c-step group: %s over %s (%d items, tasks=%s)",
-                     g["scheme"], g["item_shape"], g["items"], g["tasks"])
+            log.info("c-step group: %s over %s (%d items, tasks=%s, "
+                     "spec=%s, padding=%d)",
+                     g["scheme"], g["item_shape"], g["items"], g["tasks"],
+                     g["spec"], g["padding"])
 
         for k, mu in enumerate(schedule):
             lc_state = self.lc.set_mu(lc_state, mu, k)
