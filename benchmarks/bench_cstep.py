@@ -7,9 +7,19 @@ mixed prune+quantize multi-layer config: grouped traces ONE vmapped
 scheme program per (scheme, shape) group instead of one per task, so
 both compile time and steady-state dispatch drop as the task count
 grows (the paper's "C steps can be run in parallel", made concrete).
+
+``--overlap`` adds the end-to-end LC-loop column: the full ``LCTrainer``
+run, serial (``overlap="off"``) vs double-buffered pipeline
+(``overlap="on"``), on a ≥8-task per-matrix workload — the trainer-level
+payoff of the async L/C overlap. ``--json PATH`` writes every row to a
+JSON file next to the CSV on stdout.
+
+    PYTHONPATH=src python -m benchmarks.bench_cstep --overlap --json out.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -111,9 +121,65 @@ def _grouped_vs_pertask(n_layers: int = 6, p_quant: int = 1 << 15,
     return rows
 
 
-def run() -> list[dict]:
+# ----------------------------------------------------------------------
+# end-to-end LC loop: serial vs overlapped trainer
+# ----------------------------------------------------------------------
+def _overlapped_vs_serial(n_mu: int = 6, steps_per_l: int = 8) -> list[dict]:
+    """Full ``LCTrainer.run`` wall clock, serial vs double-buffered
+    pipeline, on a per-matrix quantization plan (14 tasks ≥ 8). Each
+    trainer runs twice and the second (jit-warm) run is timed, so the
+    column compares the loops, not the compiler."""
+    from repro.configs import get_config, reduced_config
+    from repro.data import TokenStream
+    from repro.launch.steps import init_train_state, lc_param_paths
+    from repro.runtime import LCTrainer, TrainerConfig
+
+    cfg = reduced_config(get_config("phi3-mini-3.8b")).with_(
+        pattern_reps=2)
+    key = jax.random.PRNGKey(0)
+
+    def make(overlap):
+        data = TokenStream(cfg.vocab_size, 2, 16)
+        shapes = jax.eval_shape(
+            lambda k: init_train_state(k, cfg)["params"], key)
+        paths = [p for p in lc_param_paths(shapes)
+                 if p.startswith("stages/")]
+        tasks = [CompressionTask(f"q{i}", rf"^{p}$", AsVector(),
+                                 AdaptiveQuantization(k=16, iters=10))
+                 for i, p in enumerate(paths)]
+        assert len(tasks) >= 8, len(tasks)
+        lc = LCAlgorithm(tasks, exponential_mu_schedule(1e-2, 1.5, n_mu))
+        return LCTrainer(cfg, lc, data, tcfg=TrainerConfig(
+            steps_per_l=steps_per_l, overlap=overlap)), len(tasks)
+
+    rows, wall = [], {}
+    for mode in ("off", "on"):
+        trainer, n_tasks = make(mode)
+        trainer.run(key)              # compile warm-up
+        t0 = time.time()
+        trainer.run(key)
+        wall[mode] = (time.time() - t0) * 1e3
+        mean_c = sum(h["c_step_ms"] for h in
+                     trainer.history[-n_mu:]) / n_mu
+        rows.append({
+            "name": f"cstep/lc-loop-overlap-{mode}/tasks={n_tasks}",
+            "us_per_call": wall[mode] * 1e3,
+            "derived": f"lc_run({n_mu} mu x {steps_per_l} microbatch)="
+                       f"{wall[mode]:.0f}ms mean_c_step={mean_c:.1f}ms"})
+    speedup = wall["off"] / max(wall["on"], 1e-9)
+    rows.append({
+        "name": "cstep/lc-loop-overlap-speedup",
+        "us_per_call": speedup,
+        "derived": f"serial/overlapped x{speedup:.3f} "
+                   f"(overlapped wins: {speedup > 1.0})"})
+    return rows
+
+
+def run(overlap: bool = False) -> list[dict]:
     key = jax.random.PRNGKey(0)
     rows = _grouped_vs_pertask()
+    if overlap:
+        rows = _overlapped_vs_serial() + rows
     for p in (1 << 16, 1 << 20):
         w = jax.random.normal(key, (p,))
         q = AdaptiveQuantization(k=16, iters=10)
@@ -154,3 +220,25 @@ def run() -> list[dict]:
     rows.append({"name": "cstep/dp-optimal-k8", "us_per_call": us,
                  "derived": "histogram DP (exact on bins)"})
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--overlap", action="store_true",
+                    help="add the end-to-end serial-vs-overlapped "
+                         "LC-loop column (runs the full trainer)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as JSON")
+    args = ap.parse_args()
+    rows = run(overlap=args.overlap)
+    print("name,us_per_call,derived")
+    for r in rows:
+        derived = str(r["derived"]).replace(",", ";")
+        print(f"{r['name']},{r['us_per_call']:.1f},{derived}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -59,6 +59,11 @@ class CheckpointManager:
         self.keep_last = keep_last
         self.async_save = async_save
         self._thread: threading.Thread | None = None
+        # a failed background save is re-raised from the next wait()/
+        # save() on the training thread — a daemon thread dying silently
+        # would otherwise turn "no checkpoints being written" into a
+        # surprise at restore time
+        self._error: BaseException | None = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------
@@ -105,7 +110,13 @@ class CheckpointManager:
             self._prune()
 
         if self.async_save and not blocking:
-            self._thread = threading.Thread(target=write, daemon=True)
+            def guarded():
+                try:
+                    write()
+                except BaseException as e:  # surfaced by the next wait()
+                    self._error = e
+
+            self._thread = threading.Thread(target=guarded, daemon=True)
             self._thread.start()
         else:
             write()
@@ -114,6 +125,10 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(
+                f"background checkpoint save failed: {e!r}") from e
 
     def _prune(self):
         steps = self.steps()

@@ -31,6 +31,7 @@ from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import state as lcstate
 from repro.core.grouping import describe_groups, grouped_compress
@@ -97,6 +98,18 @@ class LCAlgorithm:
             self._mult_step = self._multiplier_step_impl
             self._distortion = self._distortion_impl
             self._shifted_distortion = self._shifted_distortion_impl
+        # Async (overlap-safe) variants: NEVER donate. While an
+        # overlapped L step is in flight it still reads the previous
+        # Θ/λ/a buffers through its penalty refs, so donating them to
+        # the concurrent C/multiplier step would let XLA overwrite
+        # memory another executable is reading. When donation is off
+        # anyway, the sync and async entry points share one executable.
+        if self._donate and self._jit_c_step:
+            self._c_step_async = jax.jit(self._c_step_impl)
+            self._mult_step_async = jax.jit(self._multiplier_step_impl)
+        else:
+            self._c_step_async = self._c_step
+            self._mult_step_async = self._mult_step
 
     def set_mesh(self, mesh, rules: dict | None = None) -> "LCAlgorithm":
         """Bind the device mesh the grouped C step shards over.
@@ -189,6 +202,20 @@ class LCAlgorithm:
     def c_step(self, params, lc) -> dict:
         return self._c_step(params, lc)
 
+    def c_step_async(self, params, lc) -> dict:
+        """C step for the overlapped trainer pipeline: dispatches the
+        jitted grouped solve and returns the *unblocked* state (every
+        leaf a future). Unlike :meth:`c_step` it never donates its
+        inputs — the caller is by construction still holding the
+        previous Θ/λ/a alive inside an in-flight L step."""
+        return self._c_step_async(params, lc)
+
+    def multiplier_step_async(self, params, lc) -> dict:
+        """Non-donating, non-blocking :meth:`multiplier_step` (the λ
+        buffers it consumes are still referenced by the in-flight L
+        step's penalty refs during overlap)."""
+        return self._mult_step_async(params, lc)
+
     def group_summary(self, params) -> list[dict]:
         """The grouping the C step will use, from shapes only (no compute)."""
         self.resolve(params)
@@ -278,9 +305,17 @@ class LCAlgorithm:
                 orig_bits += get_path(params, p).size * float_bits
             theta = ts["theta"]
             if t.view.stacked:
-                n = jax.tree_util.tree_leaves(theta)[0].shape[0]
-                item = jax.tree_util.tree_map(lambda x: x[0], theta)
-                comp_bits += n * float(t.scheme.bits(item, float_bits))
+                # bits() can be item-dependent (RankSelection stores a
+                # different rank per item), so sum per item rather than
+                # extrapolating item 0 across the stack; one host
+                # transfer per leaf, then index on host (no per-item
+                # device round trips)
+                host = jax.tree_util.tree_map(np.asarray, theta)
+                n = jax.tree_util.tree_leaves(host)[0].shape[0]
+                for i in range(n):
+                    item = jax.tree_util.tree_map(
+                        lambda x, i=i: x[i], host)
+                    comp_bits += float(t.scheme.bits(item, float_bits))
             else:
                 comp_bits += float(t.scheme.bits(theta, float_bits))
         return orig_bits / max(comp_bits, 1.0)

@@ -14,6 +14,8 @@ exact SVD: the only O(m·n·R) work is two tall matmuls, which GSPMD shards.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -142,10 +144,15 @@ class RankSelection(CompressionScheme):
         return theta["u"] @ theta["v"].T
 
     def bits(self, theta, float_bits: int = 32):
+        """Storage at the *selected* rank: r·(m+n) floats for the live
+        columns of U/V, plus ⌈log2(R+1)⌉ bits to store which r ∈ {0..R}
+        was selected (the masked columns are zero and never stored)."""
         m = theta["u"].shape[0]
         n = theta["v"].shape[0]
-        # data-dependent; report with selected rank
-        return float((m + n) * float_bits)  # per unit rank; see rank()
+        r_max = theta["u"].shape[1]
+        rank_index_bits = math.ceil(math.log2(r_max + 1))
+        return float(theta["rank"]) * (m + n) * float_bits \
+            + rank_index_bits
 
     def rank(self, theta) -> jnp.ndarray:
         return theta["rank"]

@@ -13,9 +13,18 @@ checkpoints:
 parameter leaf* — because the L2 penalty separates over leaves, the L step
 never materializes the concatenated view, and both arrays inherit the
 parameter's sharding.
+
+Donation contract: ``LCAlgorithm``'s synchronous C/multiplier steps may
+donate the incoming state's buffers (Θ/λ/a update in place on
+accelerators). The *async* entry points used by the trainer's overlapped
+pipeline never donate — during overlap the previous state's λ/a leaves
+are still read by the in-flight L step, so both generations of buffers
+must stay live until the trainer swaps its penalty refs
+(:func:`ready_probe` is how it polls the in-flight generation).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -38,3 +47,23 @@ def with_tasks(lc: dict, new_tasks: dict) -> dict:
 def zeros_like_leaves(paths: list[str], leaves: list) -> dict:
     return {p: jnp.zeros(l.shape, jnp.float32)
             for p, l in zip(paths, leaves)}
+
+
+def ready_probe(lc: dict):
+    """One representative leaf of an in-flight LC state, for non-blocking
+    readiness polling (``probe.is_ready()``) in the overlapped trainer.
+
+    The last task leaf in tree order is chosen: the multiplier step's λ
+    updates are the final work dispatched at an LC boundary, so when this
+    leaf lands the whole C+λ chain is (to within dispatch-order slack)
+    done.
+    """
+    return jax.tree_util.tree_leaves(lc["tasks"])[-1]
+
+
+def probe_is_ready(probe) -> bool:
+    """``probe.is_ready()`` with a conservative fallback: jax < 0.4.10
+    arrays have no ``is_ready`` — report not-ready and let the caller's
+    deadline (swap_after / L-step end) force the block instead."""
+    is_ready = getattr(probe, "is_ready", None)
+    return bool(is_ready()) if is_ready is not None else False

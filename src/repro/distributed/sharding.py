@@ -162,6 +162,27 @@ def stacked_sharding(mesh: Mesh, entry, ndim: int) -> NamedSharding:
     return NamedSharding(mesh, P(entry, *([None] * (ndim - 1))))
 
 
+def match_shardings(tree, like):
+    """Re-lay ``tree``'s leaves onto the shardings of ``like``'s leaves.
+
+    Used by the overlapped trainer when it swaps fresh Δ(Θ)/λ refs into
+    the train state mid-L-step: the compiled train step was traced
+    against the *old* refs' layouts, so the replacements must land on
+    identical shardings or every subsequent microbatch pays a resharding
+    (or worse, a recompile). ``jax.device_put`` with a sharding is
+    async — the swap itself never stalls the pipeline. Leaves whose
+    sharding already matches (the common case: the C step's per-task
+    output constraints) pass through untouched.
+    """
+    def put(x, y):
+        want = getattr(y, "sharding", None)
+        if want is None or getattr(x, "sharding", None) == want:
+            return x
+        return jax.device_put(x, want)
+
+    return jax.tree_util.tree_map(put, tree, like)
+
+
 # ----------------------------------------------------------------------
 # Active-mesh context so model code can constrain activations without
 # threading mesh/rules through every call.

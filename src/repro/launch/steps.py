@@ -45,6 +45,23 @@ def init_lc_refs(params, paths: list[str]) -> dict:
     return {"a": a, "lam": lam, "mu": jnp.float32(1e-4)}
 
 
+def stable_lc_refs(new_refs: dict, old_refs: dict) -> dict:
+    """Fresh Δ(Θ)/λ refs re-laid onto the refs they replace.
+
+    The overlapped trainer swaps penalty refs *between microbatches of a
+    compiled L step*; the swap must be layout-invisible to the already
+    compiled executable (same shardings, async device_put only) so the
+    only semantic change is the documented stale-refs window. μ is the
+    caller's business (it advances at the L-step start, not at the
+    swap), so it is carried from ``old_refs`` untouched.
+    """
+    from repro.distributed.sharding import match_shardings
+    out = match_shardings(
+        {"a": new_refs["a"], "lam": new_refs["lam"]},
+        {"a": old_refs["a"], "lam": old_refs["lam"]})
+    return {"a": out["a"], "lam": out["lam"], "mu": old_refs["mu"]}
+
+
 def make_train_step(cfg, optimizer: AdamW | None = None,
                     lr: float | Callable = 3e-4,
                     clip_norm: float = 1.0,

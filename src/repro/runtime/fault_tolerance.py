@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass
@@ -45,8 +45,15 @@ class RetryPolicy:
 class StragglerMonitor:
     factor: float = 3.0
     window: int = 32
-    times: deque = field(default_factory=lambda: deque(maxlen=32))
+    times: deque | None = None
     stragglers: int = 0
+
+    def __post_init__(self):
+        if self.times is None:
+            self.times = deque(maxlen=self.window)
+        elif self.times.maxlen != self.window:
+            # caller handed in samples: keep the newest `window` of them
+            self.times = deque(self.times, maxlen=self.window)
 
     def observe(self, dt: float) -> bool:
         """Record a step time; True if this step straggled."""

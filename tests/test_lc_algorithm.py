@@ -181,6 +181,37 @@ def test_apply_compression_writes_feasible_params():
     assert len(np.unique(np.concatenate([w0.ravel(), w1.ravel()]))) <= 2
 
 
+def test_compression_ratio_rank_selection_per_item():
+    """Regression: the stacked-view branch of compression_ratio assumed
+    bits(item) is item-independent; RankSelection stores a different
+    rank per item, so the ratio must sum per-item bits."""
+    import math
+    from repro.core.schemes import RankSelection
+
+    kl = jax.random.split(KEY, 3)
+    # 3 stacked matrices with very different spectra → different ranks
+    items = [jax.random.normal(kl[0], (32, 24)),
+             jax.random.normal(kl[1], (32, 6)) @
+             jax.random.normal(kl[2], (6, 24)),  # rank ≤ 6
+             jnp.zeros((32, 24))]                # rank 0
+    params = {"w": jnp.stack(items)}
+    lc = LCAlgorithm(
+        [CompressionTask("rs", r"^w$", AsStacked("matrix"),
+                         RankSelection(alpha=2e-3))],
+        [1.0])
+    st = lc.init(params)
+    st = lc.c_step(params, st)
+    theta = st["tasks"]["rs"]["theta"]
+    ranks = [int(r) for r in np.asarray(theta["rank"])]
+    assert len(set(ranks)) > 1, ranks  # genuinely item-dependent
+    r_max = theta["u"].shape[2]
+    idx_bits = math.ceil(math.log2(r_max + 1))
+    comp_bits = sum(r * (32 + 24) * 32 + idx_bits for r in ranks)
+    expect = (3 * 32 * 24 * 32) / max(comp_bits, 1.0)
+    assert float(lc.compression_ratio(params, st)) == pytest.approx(
+        expect, rel=1e-6)
+
+
 def test_flatten_set_get_path():
     p = {"a": {"b": jnp.ones((2,)), "c": jnp.zeros((3,))}}
     flat = flatten_params(p)

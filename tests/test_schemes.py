@@ -171,6 +171,24 @@ def test_rank_selection_mu_drives_rank_up():
     assert r_hi >= r_lo
 
 
+def test_rank_selection_bits_uses_selected_rank():
+    """Regression: bits() returned (m+n)·float_bits per *unit* rank,
+    ignoring θ["rank"] — inflating compression ratios by ~rank×."""
+    import math
+    w = jax.random.normal(KEY, (64, 48))
+    s = RankSelection(alpha=0.1)
+    th = s.compress(w, None, mu=1.0)
+    r = int(th["rank"])
+    assert 0 < r < min(w.shape)  # a genuinely partial rank
+    r_max = th["u"].shape[1]
+    expect = r * (64 + 48) * 32 + math.ceil(math.log2(r_max + 1))
+    assert s.bits(th) == pytest.approx(expect)
+    # and it is rank-dependent: a cheaper α keeps more rank ⇒ more bits
+    th_hi = RankSelection(alpha=1e-2).compress(w, None, mu=1.0)
+    assert int(th_hi["rank"]) > r
+    assert RankSelection(alpha=1e-2).bits(th_hi) > s.bits(th)
+
+
 # ----------------------------------------------------------------------
 # Additive combinations
 # ----------------------------------------------------------------------

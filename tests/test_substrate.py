@@ -156,6 +156,42 @@ def test_straggler_monitor():
     assert m.observe(0.1) is False
 
 
+def test_straggler_monitor_honors_window():
+    # regression: maxlen was hard-coded to 32, silently ignoring window
+    m = StragglerMonitor(window=128)
+    for _ in range(100):
+        m.observe(0.1)
+    assert m.times.maxlen == 128
+    assert len(m.times) == 100
+    m_small = StragglerMonitor(window=8)
+    for _ in range(100):
+        m_small.observe(0.1)
+    assert len(m_small.times) == 8
+
+
+def test_checkpoint_background_save_error_surfaces(tmp_path):
+    """A failed async save must raise on the next wait()/save(), not die
+    silently on the daemon thread."""
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    st = _state(KEY)
+    mgr.save(st, 1)
+    mgr.wait()
+    # squat the writer's scratch path with a regular file: the
+    # background rmtree/makedirs fails (works even when running as root,
+    # unlike permission bits)
+    squatter = os.path.join(str(tmp_path), "step_00000002.tmp")
+    with open(squatter, "w") as f:
+        f.write("not a directory")
+    mgr.save(st, 2)
+    with pytest.raises(RuntimeError, match="background checkpoint"):
+        mgr.wait()
+    # the error is consumed: the manager keeps working afterwards
+    os.remove(squatter)
+    mgr.save(st, 3)
+    mgr.wait()
+    assert 3 in mgr.steps()
+
+
 def test_trainer_recovers_from_injected_faults(tmp_path):
     """Full trainer loop with injected transient failures — must finish
     and the loss history must be intact."""
