@@ -8,11 +8,18 @@ scheme program per (scheme, shape) group instead of one per task, so
 both compile time and steady-state dispatch drop as the task count
 grows (the paper's "C steps can be run in parallel", made concrete).
 
+The kernel-vs-jnp column times the dispatch layer's named batched
+solvers (``kmeans_lloyd``, ``topk_mask`` with per-item mixed κ) on one
+packed group: the ``jnp`` backend against the Pallas items-grid kernels
+(compiled on TPU; interpret mode elsewhere — slow but the same program,
+with correctness parity asserted inline).
+
 ``--overlap`` adds the end-to-end LC-loop column: the full ``LCTrainer``
 run, serial (``overlap="off"``) vs double-buffered pipeline
 (``overlap="on"``), on a ≥8-task per-matrix workload — the trainer-level
 payoff of the async L/C overlap. ``--json PATH`` writes every row to a
-JSON file next to the CSV on stdout.
+JSON file next to the CSV on stdout (CI writes ``BENCH_cstep.json``
+via ``benchmarks.run --artifact`` so the perf trajectory records).
 
     PYTHONPATH=src python -m benchmarks.bench_cstep --overlap --json out.json
 """
@@ -122,6 +129,60 @@ def _grouped_vs_pertask(n_layers: int = 6, p_quant: int = 1 << 15,
 
 
 # ----------------------------------------------------------------------
+# kernel dispatch: batched Pallas solvers vs the batched jnp solvers
+# ----------------------------------------------------------------------
+def _kernel_vs_jnp(n_items: int = 8, p: int = 1 << 12) -> list[dict]:
+    """The dispatch layer's backends on one packed group: ``jnp`` (the
+    bit-identical vmap-equivalent) vs ``interpret`` (the Pallas
+    items-grid kernel, emulated — on TPU the same rows measure the
+    compiled kernel). Correctness parity is asserted inline so the
+    trajectory never records a fast-but-wrong kernel."""
+    import numpy as np
+
+    from repro.kernels.dispatch import resolve_backend
+
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (n_items, p))
+    cb0 = jnp.sort(jax.random.normal(jax.random.fold_in(key, 1),
+                                     (n_items, 16)), axis=-1)
+    kappa = jnp.arange(1, n_items + 1, dtype=jnp.int32) * (p // 20)
+    kernel = resolve_backend("pallas")   # "pallas" on TPU else "interpret"
+
+    rows = []
+    res = {}
+    for impl in ("jnp", kernel):
+        us = _time(jax.jit(lambda w_, c_: kops.kmeans_batched(
+            w_, c_, iters=10, impl=impl)), w, cb0)
+        res[f"km-{impl}"] = us
+        rows.append({
+            "name": f"cstep/kernel-kmeans-{impl}/items={n_items}/P={p}",
+            "us_per_call": us,
+            "derived": "batched items-grid lloyd x10"})
+        us = _time(jax.jit(lambda w_, k_: pops.topk_mask_batched(
+            w_, k_, impl=impl)), w, kappa)
+        res[f"tk-{impl}"] = us
+        rows.append({
+            "name": f"cstep/kernel-topk-{impl}/items={n_items}/P={p}",
+            "us_per_call": us,
+            "derived": "batched bisection; per-item (mixed) kappa"})
+    # parity gate: masks identical, codebooks within documented atol
+    mj = pops.topk_mask_batched(w, kappa, impl="jnp")
+    mk = pops.topk_mask_batched(w, kappa, impl=kernel)
+    np.testing.assert_array_equal(np.asarray(mj), np.asarray(mk))
+    cj, _ = kops.kmeans_batched(w, cb0, iters=10, impl="jnp")
+    ck, _ = kops.kmeans_batched(w, cb0, iters=10, impl=kernel)
+    np.testing.assert_allclose(np.asarray(cj), np.asarray(ck), atol=1e-3)
+    for op in ("km", "tk"):
+        x = res[f"{op}-jnp"] / max(res[f"{op}-{kernel}"], 1e-9)
+        rows.append({
+            "name": f"cstep/kernel-vs-jnp-{op}/backend={kernel}",
+            "us_per_call": x,
+            "derived": f"jnp/{kernel} x{x:.3f} (parity asserted; "
+                       f"interpret mode is the emulated-TPU CI path)"})
+    return rows
+
+
+# ----------------------------------------------------------------------
 # end-to-end LC loop: serial vs overlapped trainer
 # ----------------------------------------------------------------------
 def _overlapped_vs_serial(n_mu: int = 6, steps_per_l: int = 8) -> list[dict]:
@@ -177,7 +238,7 @@ def _overlapped_vs_serial(n_mu: int = 6, steps_per_l: int = 8) -> list[dict]:
 
 def run(overlap: bool = False) -> list[dict]:
     key = jax.random.PRNGKey(0)
-    rows = _grouped_vs_pertask()
+    rows = _grouped_vs_pertask() + _kernel_vs_jnp()
     if overlap:
         rows = _overlapped_vs_serial() + rows
     for p in (1 << 16, 1 << 20):

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import state as lcstate
-from repro.core.grouping import describe_groups, grouped_compress
+from repro.core.grouping import (
+    describe_groups, grouped_compress, grouped_init, solve_task)
 from repro.core.penalty import lc_penalty
 from repro.core.tasks import CompressionTask, check_disjoint, get_path
 from repro.core.views import AsVector
@@ -65,7 +66,8 @@ class LCAlgorithm:
                  group_tasks: bool = True,
                  donate: bool | str = "auto",
                  mesh=None,
-                 sharding_rules: dict | None = None):
+                 sharding_rules: dict | None = None,
+                 cstep_backend: str = "auto"):
         self.tasks = list(tasks)
         self.mu_schedule = list(mu_schedule)
         self.l_step = l_step
@@ -73,6 +75,10 @@ class LCAlgorithm:
         self.group_tasks = bool(group_tasks)
         self.mesh = mesh
         self.sharding_rules = sharding_rules
+        # kernel dispatch backend for opted-in scheme solvers
+        # ("auto" | "jnp" | "interpret" | "pallas" | "off"); resolved
+        # per group by repro.kernels.dispatch — see docs/architecture.md
+        self.cstep_backend = self._check_backend(cstep_backend)
         if donate == "auto":
             # donation is a no-op (with a warning) on CPU; only ask for
             # in-place Θ/λ/a updates where XLA implements aliasing.
@@ -110,6 +116,11 @@ class LCAlgorithm:
         else:
             self._c_step_async = self._c_step
             self._mult_step_async = self._mult_step
+        # grouped Θ^DC cold start: one jitted program, one scheme trace
+        # per group (never donates — params are the caller's)
+        self._init_grouped = (jax.jit(self._init_grouped_impl)
+                              if self._jit_c_step
+                              else self._init_grouped_impl)
 
     def set_mesh(self, mesh, rules: dict | None = None) -> "LCAlgorithm":
         """Bind the device mesh the grouped C step shards over.
@@ -122,6 +133,29 @@ class LCAlgorithm:
         self.mesh = mesh
         if rules is not None:
             self.sharding_rules = rules
+        self._build_steps()
+        return self
+
+    @staticmethod
+    def _check_backend(backend):
+        """Fail fast on a typo'd backend: the first consumer would
+        otherwise be dispatch.resolve_backend inside the first C-step
+        trace, minutes into a run and wrapped in a jit traceback."""
+        valid = (None, "auto", "jnp", "interpret", "pallas", "off")
+        if backend not in valid:
+            raise ValueError(
+                f"cstep_backend must be one of {valid[1:]}, "
+                f"got {backend!r}")
+        return backend
+
+    def set_backend(self, backend: str) -> "LCAlgorithm":
+        """Select the kernel dispatch backend for the C step.
+
+        Like :meth:`set_mesh` this is trace-time state (it decides
+        which solver implementations the C-step HLO bakes in), so the
+        jitted steps are rebuilt.
+        """
+        self.cstep_backend = self._check_backend(backend)
         self._build_steps()
         return self
 
@@ -147,12 +181,34 @@ class LCAlgorithm:
         return self
 
     def init(self, params) -> dict:
-        """Θ ← Π(w̄), λ ← 0 (direct compression)."""
+        """Θ ← Π(w̄), λ ← 0 (direct compression).
+
+        With ``group_tasks=True`` (default) the Θ^DC solves run through
+        :func:`grouped_init` inside one jitted program — one scheme
+        trace per (scheme, item shape) group, so cold-start compile
+        cost is O(groups) like the C step's (and the packed item axes
+        shard over a bound mesh). ``group_tasks=False`` keeps the
+        legacy eager per-task loop; both produce identical state.
+        """
         self.resolve(params)
+        if self.group_tasks:
+            return self._init_grouped(params)
         tasks_state = {}
         for t in self.tasks:
             theta = t.scheme_init(t.compressible(params))
             a = t.scatter_decompressed(t.scheme_decompress(theta), params)
+            lam = lcstate.zeros_like_leaves(t.paths, t.leaves(params))
+            tasks_state[t.name] = lcstate.task_state(theta, lam, a)
+        return lcstate.lc_state(tasks_state, self.mu_schedule[0], k=0)
+
+    def _init_grouped_impl(self, params):
+        xs = {t.name: t.compressible(params) for t in self.tasks}
+        results = grouped_init(self.tasks, xs, mesh=self.mesh,
+                               rules=self.sharding_rules)
+        tasks_state = {}
+        for t in self.tasks:
+            theta, a_arr = results[t.name]
+            a = t.scatter_decompressed(a_arr, params)
             lam = lcstate.zeros_like_leaves(t.paths, t.leaves(params))
             tasks_state[t.name] = lcstate.task_state(theta, lam, a)
         return lcstate.lc_state(tasks_state, self.mu_schedule[0], k=0)
@@ -164,13 +220,18 @@ class LCAlgorithm:
         return self._c_step_pertask(params, lc)
 
     def _c_step_pertask(self, params, lc):
-        """Legacy path: one scheme trace per task (`group_tasks=False`)."""
+        """Per-task path: one scheme trace per task (`group_tasks=False`).
+
+        Kernel dispatch still applies — each opted-in task's solve runs
+        through its named batched solver on a 1-task item stack — so
+        the kernel path is exercised on both dispatch modes."""
         mu = lc["mu"]
         new_tasks = {}
         for t in self.tasks:
             ts = lc["tasks"][t.name]
             x = t.shifted_compressible(params, ts, mu)
-            theta = t.scheme_compress(x, ts["theta"], mu)
+            theta = solve_task(t, x, ts["theta"], mu,
+                               backend=self.cstep_backend)
             a = t.scatter_decompressed(t.scheme_decompress(theta), params)
             new_tasks[t.name] = lcstate.task_state(theta, ts["lam"], a)
         return lcstate.with_tasks(lc, new_tasks)
@@ -190,7 +251,8 @@ class LCAlgorithm:
                   for t in self.tasks}
         results = grouped_compress(self.tasks, xs, thetas, mu,
                                    mesh=self.mesh,
-                                   rules=self.sharding_rules)
+                                   rules=self.sharding_rules,
+                                   backend=self.cstep_backend)
         new_tasks = {}
         for t in self.tasks:
             theta, a_arr = results[t.name]
@@ -223,11 +285,13 @@ class LCAlgorithm:
                                      t.leaves(params))
               for t in self.tasks}
         # group_tasks=False runs the unsharded per-task path, so don't
-        # report a layout that will never be applied
+        # report a layout that will never be applied (kernel dispatch
+        # does apply there — solver/backend stay honest either way)
         return describe_groups(self.tasks, xs,
                                mesh=self.mesh if self.group_tasks
                                else None,
-                               rules=self.sharding_rules)
+                               rules=self.sharding_rules,
+                               backend=self.cstep_backend)
 
     def _multiplier_step_impl(self, params, lc):
         mu = lc["mu"]

@@ -10,8 +10,11 @@ programs). Grouped dispatch instead:
 2. concatenates each group's *items* (stacked views contribute their
    stack, single-array views contribute one item) along a leading axis;
 3. packs the warm-start Θ pytrees the same way (`pack_thetas`);
-4. runs ONE ``vmap``-ed ``scheme.compress`` (and ``decompress``) per
-   group;
+4. solves each group with ONE program: a **named batched kernel
+   solver** resolved through ``repro.kernels.dispatch`` when the
+   scheme opts in (items-grid Pallas on TPU, interpret-mode Pallas or
+   the bit-identical batched jnp solver on CPU), else one ``vmap``-ed
+   ``scheme.compress``;
 5. slices Θ and Δ(Θ) back out per task.
 
 Everything here runs at trace time inside the single jitted ``c_step`` —
@@ -21,17 +24,24 @@ one scheme program per *group* instead of per *task*.
 With a ``mesh``, the packed item axis is additionally annotated with the
 ``"items"`` logical sharding rule (``distributed/sharding.py``, default
 candidates ``[("data",), ()]``): the stacked items are embarrassingly
-parallel, so GSPMD splits the vmapped scheme program across the data
-axis — a 64-layer group's C step runs data-parallel. Item counts that
-don't divide the data axis are zero-padded up to the next multiple
-(padded lanes are computed and discarded; vmap lanes are independent, so
-the surviving slices are bit-identical to the unsharded result), and the
+parallel, so GSPMD splits the group program across the data axis — a
+64-layer group's C step runs data-parallel. Item counts that don't
+divide the data axis are zero-padded up to the next multiple (padded
+lanes are computed and discarded; items are independent, so the
+surviving slices are bit-identical to the unsharded result), and the
 per-task Θ/Δ(Θ) slices are re-constrained with each task's own item
 count so they land where the L step consumes them. ``mesh=None``
 (default) is exactly the pre-mesh path.
 
-Tasks whose scheme opts out (``group_key() is None``) fall through to
-the per-task path unchanged, so exotic schemes need no vmap support.
+Kernel dispatch (``backend=``) composes with all of it: under the
+batched signature, schemes that move a hyperparameter into a per-item
+operand (ℓ0 pruning's κ) group across values of it — one launch for
+mixed-κ tasks — and the per-item operands are padded/sharded alongside
+the items. Tasks whose scheme opts out (``group_key() is None``) fall
+through to the per-task path unchanged, so exotic schemes need no vmap
+support; a scheme whose subclass overrides ``compress`` without
+standing behind ``compress_batched`` is likewise kept on the vmap path
+(see ``CompressionScheme.kernel_dispatch_ready``).
 """
 from __future__ import annotations
 
@@ -48,19 +58,44 @@ from repro.distributed.sharding import (
     items_partition, shard_map, stacked_sharding)
 
 
-def build_groups(tasks: Sequence[CompressionTask],
-                 xs: dict) -> list[list[CompressionTask]]:
+def _task_solver(scheme, backend):
+    """(solver_fn, actual_backend) for a scheme under a requested
+    backend, or (None, None) → vmap path."""
+    if backend in (None, "off") or not scheme.kernel_dispatch_ready():
+        return None, None
+    # deferred import: `import repro.core` must not eagerly pull the
+    # Pallas kernel modules (jax.experimental.pallas + registration)
+    # for users who never turn kernel dispatch on
+    from repro.kernels.dispatch import lookup as solver_lookup
+    return solver_lookup(scheme.solver, backend)
+
+
+def build_groups(tasks: Sequence[CompressionTask], xs: dict,
+                 backend: str | None = None,
+                 for_init: bool = False) -> list[list[CompressionTask]]:
     """Partition tasks into groups of equal group signature.
 
     ``xs`` maps task name → compressible array (or ShapeDtypeStruct).
     Non-groupable tasks come back as singleton groups. Group order
-    follows first appearance, so the output is deterministic.
+    follows first appearance, so the output is deterministic. With a
+    kernel ``backend`` active, dispatch-ready schemes group by their
+    ``batch_key()`` (κ and friends become per-item operands) — but only
+    when the named solver actually *resolves* in the registry: an
+    unregistered name must keep the legacy per-value grouping, or the
+    vmap fallback would solve a mixed-hyperparameter group with
+    ``group[0]``'s values.
     """
     groups: dict = {}
     order: list = []
     solos: list[list[CompressionTask]] = []
     for t in tasks:
-        sig = t.group_signature(xs[t.name])
+        batched = _task_solver(t.scheme, backend)[0] is not None
+        sig = t.group_signature(xs[t.name], batched=batched)
+        if for_init and sig is not None:
+            # init-only hyperparameters (a DP warm start) are invisible
+            # to group_key; the init grouping identity must include them
+            ik = t.scheme.init_key()
+            sig = None if ik is None else (sig, ik)
         if sig is None:
             solos.append([t])
             continue
@@ -73,7 +108,8 @@ def build_groups(tasks: Sequence[CompressionTask],
 
 def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
                     mesh: Mesh | None = None,
-                    rules: dict | None = None) -> list[dict]:
+                    rules: dict | None = None,
+                    backend: str | None = None) -> list[dict]:
     """Human/bench-readable summary of the grouping a C step would use.
 
     With a ``mesh``, each entry also reports how the packed item axis
@@ -82,9 +118,15 @@ def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
     per-task path, or replication fallback) and ``padding`` is the
     number of zero items appended so the count divides the assigned
     mesh axes (0 when it already divides, or when not sharded).
+
+    ``solver``/``backend`` report kernel dispatch *honestly*: ``solver``
+    is the registry name the group's solve will actually go through
+    (``None`` = vmapped scheme program) and ``backend`` the resolved
+    implementation that will run — e.g. a ``"pallas"`` request off-TPU
+    reports ``"interpret"``.
     """
     out = []
-    for group in build_groups(tasks, xs):
+    for group in build_groups(tasks, xs, backend=backend):
         t0 = group[0]
         sig = t0.group_signature(xs[t0.name])
         grouped = sig is not None and len(group) > 1
@@ -93,6 +135,7 @@ def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
         if mesh is not None and grouped:
             entry, pad = items_partition(n_items, mesh, rules)
             spec = P(entry) if entry is not None else None
+        solver_fn, actual = _task_solver(t0.scheme, backend)
         out.append({
             "scheme": t0.scheme.name,
             "item_shape": t0.view.item_shape(xs[t0.name]),
@@ -102,12 +145,14 @@ def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
             "grouped": grouped,
             "spec": spec,
             "padding": pad,
+            "solver": t0.scheme.solver if solver_fn is not None else None,
+            "backend": actual,
         })
     return out
 
 
 def _pad_leading(x, pad: int):
-    """Append ``pad`` zero items along axis 0 (the vmapped item axis)."""
+    """Append ``pad`` zero items along axis 0 (the packed item axis)."""
     return jnp.concatenate(
         [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
 
@@ -126,75 +171,133 @@ def _constrain_replicated(tree, mesh):
             x, NamedSharding(mesh, P())), tree)
 
 
+def _run_group_solve(solve, arrays: tuple, n_items: int,
+                     mesh: Mesh | None, rules: dict | None):
+    """Run a packed-group solve, optionally sharded over the mesh.
+
+    ``arrays`` are pytrees whose every leaf carries the packed item
+    axis; ``solve(*arrays)`` must return a 2-tuple of such pytrees
+    (new Θ, decompressed items). Handles the pad → replicate-constrain
+    → shard_map → slice dance from the module docstring; ``mesh=None``
+    calls ``solve`` directly. Returns ``(theta_packed, a_packed)`` with
+    the padding already sliced off.
+    """
+    entry, pad = (None, 0)
+    if mesh is not None:
+        entry, pad = items_partition(n_items, mesh, rules)
+
+    if entry is not None:
+        # padded lanes are independent items computed and discarded, so
+        # the surviving slices match mesh=None exactly
+        if pad:
+            arrays = tuple(
+                jax.tree_util.tree_map(lambda x: _pad_leading(x, pad), a)
+                for a in arrays)
+        # enter the shard_map boundary from an explicit replicated
+        # layout: on jax 0.4.x GSPMD's reshard-into-manual from a
+        # dim-sharded concatenate miscompiles (the output comes back
+        # psummed over the unmentioned mesh axes), while
+        # replicated → manual slices correctly.
+        arrays = tuple(_constrain_replicated(a, mesh) for a in arrays)
+        # shard_map, not bare GSPMD: each device solves its local items,
+        # so schemes built on custom calls (LAPACK svd/qr) partition
+        # correctly — the SPMD partitioner has no rule for those and
+        # miscompiles sliced uses.
+        spec = P(entry)
+        theta_packed, a_packed = shard_map(
+            solve, mesh, in_specs=(spec,) * len(arrays),
+            out_specs=(spec, spec))(*arrays)
+    else:
+        theta_packed, a_packed = solve(*arrays)
+
+    if pad:
+        theta_packed = jax.tree_util.tree_map(
+            lambda x: x[:n_items], theta_packed)
+        a_packed = a_packed[:n_items]
+    return theta_packed, a_packed
+
+
+def _group_operands(group: Sequence[CompressionTask], counts: list[int]):
+    """Concatenate each task's per-item solver operands into the packed
+    form ``compress_batched`` consumes (mixed-κ: one (Σ items,) array)."""
+    per_task = [t.scheme.batch_operands(n) for t, n in zip(group, counts)]
+    return tuple(jnp.concatenate(parts, axis=0)
+                 for parts in zip(*per_task))
+
+
+def solve_task(task: CompressionTask, x, theta, mu,
+               backend: str | None = None):
+    """One task's C solve, kernel-dispatched when the scheme opts in.
+
+    The per-task twin of the grouped batched path: the same named
+    solver runs on the task's own item stack (a single-array view is a
+    1-item stack), so ``group_tasks=False`` and singleton groups also
+    exercise the kernel path. Falls back to the plain (vmapped when
+    stacked) ``scheme.compress``.
+    """
+    solver_fn, _ = _task_solver(task.scheme, backend)
+    if solver_fn is None:
+        return task.scheme_compress(x, theta, mu)
+    items = task.view.to_items(x)
+    ti = theta if task.view.stacked else add_leading_axis(theta)
+    operands = task.scheme.batch_operands(task.view.item_count(x))
+    nt = task.scheme.compress_batched(solver_fn, items, ti, operands,
+                                      mu=mu)
+    return nt if task.view.stacked else drop_leading_axis(nt)
+
+
 def grouped_compress(tasks: Sequence[CompressionTask], xs: dict,
                      thetas: dict, mu, mesh: Mesh | None = None,
-                     rules: dict | None = None) -> dict:
-    """One C step over all tasks with grouped vmap dispatch.
+                     rules: dict | None = None,
+                     backend: str | None = None) -> dict:
+    """One C step over all tasks with grouped dispatch.
 
     Returns ``{task_name: (new_theta, a_arr)}`` where ``a_arr`` is the
     decompressed Δ(Θ) in the task's compressible shape. Must be called
     under jit (it is trace-time machinery, not a runtime scheduler).
     With a ``mesh``, the packed item axis of every multi-task group is
     sharded per the ``"items"`` rule — see the module docstring; the
-    numerics are unchanged.
+    numerics are unchanged. With a kernel ``backend``, opted-in schemes
+    solve through the dispatch layer's named batched solvers.
     """
     out = {}
-    for group in build_groups(tasks, xs):
+    for group in build_groups(tasks, xs, backend=backend):
         if len(group) == 1:
-            # singleton: per-task path (also the non-groupable fallback);
-            # a 1-group vmap would only rewrite indexing for no benefit.
+            # singleton: per-task path (also the non-groupable
+            # fallback) — kernel-dispatched when the scheme opts in,
+            # but never sharded (nothing to split across tasks).
             t = group[0]
-            theta = t.scheme_compress(xs[t.name], thetas[t.name], mu)
+            theta = solve_task(t, xs[t.name], thetas[t.name], mu,
+                               backend=backend)
             out[t.name] = (theta, t.scheme_decompress(theta))
             continue
 
-        scheme = group[0].scheme  # identical group_key ⇒ same static cfg
+        # equal batched signature ⇒ same class and batch_key; operand-
+        # ized hyperparameters (κ) may differ per member and ride in
+        # packed per-item arrays, never through group[0]'s attributes
+        scheme = group[0].scheme
+        solver_fn, _ = _task_solver(scheme, backend)
         items = jnp.concatenate(
             [t.view.to_items(xs[t.name]) for t in group], axis=0)
         packed = pack_thetas([
             thetas[t.name] if t.view.stacked
             else add_leading_axis(thetas[t.name]) for t in group])
-
         counts = [t.view.item_count(xs[t.name]) for t in group]
         n_items = sum(counts)
-        entry, pad = (None, 0)
-        if mesh is not None:
-            entry, pad = items_partition(n_items, mesh, rules)
+        operands = (_group_operands(group, counts)
+                    if solver_fn is not None else ())
 
-        def _solve(xi, ti):
-            nt = jax.vmap(
-                lambda x, th: scheme.compress(x, th, mu=mu))(xi, ti)
+        def _solve(xi, ti, *ops, scheme=scheme, solver_fn=solver_fn):
+            if solver_fn is not None:
+                nt = scheme.compress_batched(solver_fn, xi, ti, ops,
+                                             mu=mu)
+            else:
+                nt = jax.vmap(
+                    lambda x, th: scheme.compress(x, th, mu=mu))(xi, ti)
             return nt, jax.vmap(scheme.decompress)(nt)
 
-        if entry is not None:
-            # padded lanes are independent vmap lanes computed and
-            # discarded, so the surviving slices match mesh=None exactly
-            if pad:
-                items = _pad_leading(items, pad)
-                packed = jax.tree_util.tree_map(
-                    lambda x: _pad_leading(x, pad), packed)
-            # enter the shard_map boundary from an explicit replicated
-            # layout: on jax 0.4.x GSPMD's reshard-into-manual from a
-            # dim-sharded concatenate miscompiles (the output comes back
-            # psummed over the unmentioned mesh axes), while
-            # replicated → manual slices correctly.
-            items = _constrain_replicated(items, mesh)
-            packed = _constrain_replicated(packed, mesh)
-            # shard_map, not bare GSPMD: each device vmaps the scheme
-            # over its local items, so schemes built on custom calls
-            # (LAPACK svd/qr) partition correctly — the SPMD partitioner
-            # has no rule for those and miscompiles sliced uses.
-            spec = P(entry)
-            new_packed, a_packed = shard_map(
-                _solve, mesh, in_specs=(spec, spec),
-                out_specs=(spec, spec))(items, packed)
-        else:
-            new_packed, a_packed = _solve(items, packed)
-
-        if pad:
-            new_packed = jax.tree_util.tree_map(
-                lambda x: x[:n_items], new_packed)
-            a_packed = a_packed[:n_items]
+        new_packed, a_packed = _run_group_solve(
+            _solve, (items, packed) + operands, n_items, mesh, rules)
 
         theta_parts = unpack_thetas(new_packed, counts)
         off = 0
@@ -207,6 +310,59 @@ def grouped_compress(tasks: Sequence[CompressionTask], xs: dict,
                 # land the sliced stack where the L step consumes it:
                 # the task's own item count decides its spec (exact
                 # divisibility only — slices can't be padded)
+                t_entry, _ = items_partition(n, mesh, rules,
+                                             allow_pad=False)
+                if t_entry is not None:
+                    th = _constrain_leading(th, mesh, t_entry)
+                    a_arr = _constrain_leading(a_arr, mesh, t_entry)
+            out[t.name] = (th, a_arr)
+    return out
+
+
+def grouped_init(tasks: Sequence[CompressionTask], xs: dict,
+                 mesh: Mesh | None = None,
+                 rules: dict | None = None) -> dict:
+    """Direct compression Θ^DC = Π(w̄) with grouped dispatch.
+
+    The cold-start twin of :func:`grouped_compress`: tasks group by
+    their (non-batched) signature extended with ``scheme.init_key()``
+    — ``init`` has no warm start to feed a kernel solver, operand-ized
+    hyperparameters like κ are still static here, and init-only
+    settings (DP warm starts) must not merge — so each group runs ONE
+    vmapped ``scheme.init``, and compile cost at startup is O(groups)
+    instead of O(tasks). Returns
+    ``{task_name: (theta, a_arr)}``; call under jit. With a ``mesh``
+    the packed item axis shards exactly like the C step's.
+    """
+    out = {}
+    for group in build_groups(tasks, xs, for_init=True):
+        if len(group) == 1:
+            t = group[0]
+            theta = t.scheme_init(xs[t.name])
+            out[t.name] = (theta, t.scheme_decompress(theta))
+            continue
+
+        scheme = group[0].scheme  # identical init_key ⇒ same static cfg
+        items = jnp.concatenate(
+            [t.view.to_items(xs[t.name]) for t in group], axis=0)
+        counts = [t.view.item_count(xs[t.name]) for t in group]
+        n_items = sum(counts)
+
+        def _solve(xi, scheme=scheme):
+            th = jax.vmap(lambda x: scheme.init(x))(xi)
+            return th, jax.vmap(scheme.decompress)(th)
+
+        theta_packed, a_packed = _run_group_solve(
+            _solve, (items,), n_items, mesh, rules)
+
+        theta_parts = unpack_thetas(theta_packed, counts)
+        off = 0
+        for t, th, n in zip(group, theta_parts, counts):
+            a_arr = t.view.from_items(a_packed[off:off + n])
+            off += n
+            if not t.view.stacked:
+                th = drop_leading_axis(th)
+            elif mesh is not None:
                 t_entry, _ = items_partition(n, mesh, rules,
                                              allow_pad=False)
                 if t_entry is not None:

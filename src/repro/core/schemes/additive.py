@@ -32,6 +32,14 @@ class AdditiveCombination(CompressionScheme):
             return None
         return ("additive", self.iters, subs)
 
+    def init_key(self):
+        # compose sub-scheme init identities: a sub-scheme whose init
+        # differs (DP warm start) must split the additive init group too
+        subs = tuple(s.init_key() for s in self.schemes)
+        if any(k is None for k in subs):
+            return None
+        return ("additive-init", self.iters, subs)
+
     def _to_domain(self, x, scheme):
         if scheme.domain == "vector" and x.ndim != 1:
             return x.ravel()

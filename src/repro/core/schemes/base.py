@@ -31,6 +31,13 @@ class CompressionScheme:
     #: "vector" | "matrix" — what the view must produce.
     domain: str = "vector"
 
+    #: name of a batched solver in the kernel dispatch registry
+    #: (``repro.kernels.dispatch``), or None — the scheme then always
+    #: runs as a vmapped per-item program. Declaring a name is a claim
+    #: that :meth:`compress_batched` reproduces :meth:`compress` for
+    #: every item of a packed stack.
+    solver: str | None = None
+
     def init(self, w: jnp.ndarray, key=None) -> Theta:
         """Direct compression Θ^DC = Π(w) used to initialize the LC loop."""
         raise NotImplementedError
@@ -77,6 +84,84 @@ class CompressionScheme:
         hatch for exotic schemes whose compress is not vmappable.
         """
         return None
+
+    def init_key(self) -> tuple | None:
+        """Static identity for grouped *init* dispatch (`grouped_init`).
+
+        Defaults to :meth:`group_key`, which only has to cover
+        ``compress``-changing hyperparameters. A scheme whose ``init``
+        depends on extra hyperparameters (e.g. a DP warm start that
+        ``compress`` never reads) must extend this key with them, or
+        ``grouped_init`` would solve the group with ``group[0]``'s
+        init settings. ``None`` keeps init on the per-task path.
+        """
+        return self.group_key()
+
+    # ------------------------------------------------------------------
+    # Batched kernel dispatch (see ``repro.kernels.dispatch`` and
+    # ``core/grouping.py``). A scheme opts in by setting ``solver`` and
+    # implementing ``compress_batched``; everything else has working
+    # defaults.
+    # ------------------------------------------------------------------
+    def batch_key(self) -> tuple | None:
+        """Static identity for *kernel-dispatched* grouping.
+
+        Defaults to :meth:`group_key`. A scheme that moves a
+        hyperparameter out of the trace and into a per-item operand
+        (:meth:`batch_operands`) overrides this to drop it from the
+        key — e.g. ℓ0 pruning drops κ, so tasks differing only in κ
+        pack into one kernel launch (mixed-κ grouping). Must still
+        capture every hyperparameter that *does* change the batched
+        program (K, iteration counts, …).
+        """
+        return self.group_key()
+
+    def batch_operands(self, n_items: int) -> tuple:
+        """Per-item operand arrays (leading axis ``n_items``) passed to
+        :meth:`compress_batched` — the packed form of hyperparameters
+        dropped from :meth:`batch_key`. Default: none."""
+        return ()
+
+    def compress_batched(self, solve, w: jnp.ndarray, theta: Theta,
+                         operands: tuple, mu=None) -> Theta:
+        """Whole-group C step: one call solves a packed item stack.
+
+        ``solve`` is the resolved implementation of :attr:`solver` for
+        the active backend; ``w`` is ``(n_items, *item_shape)``;
+        ``theta`` carries the same leading axis; ``operands`` is the
+        group-concatenated result of :meth:`batch_operands`. Must be
+        numerically equivalent to vmapping :meth:`compress` (bit-equal
+        on the jnp backend; documented tolerance on kernel backends).
+        """
+        raise NotImplementedError
+
+    def kernel_dispatch_ready(self) -> bool:
+        """Whether the dispatch layer may replace ``vmap(compress)``
+        with :meth:`compress_batched` for this scheme instance.
+
+        Requires an opted-in solver and a groupable :meth:`batch_key`.
+        Two safety rails: ``group_key() is None`` (the documented
+        "fully custom scheme" escape hatch) opts out of kernel dispatch
+        too, even when a parent class declares a batched ``batch_key``;
+        and the class providing the active ``compress`` must also stand
+        behind ``compress_batched`` — a subclass that overrides
+        ``compress`` but inherits ``compress_batched`` would silently
+        run the parent's math, so it falls back to the vmap path
+        instead.
+        """
+        if (self.solver is None or self.group_key() is None
+                or self.batch_key() is None):
+            return False
+
+        def provider(name):
+            for c in type(self).__mro__:
+                if name in c.__dict__:
+                    return c
+            return None
+
+        cp, cbp = provider("compress"), provider("compress_batched")
+        return (cbp is not None and cbp is not CompressionScheme
+                and cp is not None and issubclass(cbp, cp))
 
     # ------------------------------------------------------------------
     def distortion(self, w: jnp.ndarray, theta: Theta) -> jnp.ndarray:

@@ -50,6 +50,12 @@ class ConstraintL0Pruning(CompressionScheme):
     """s.t. ‖θ‖₀ ≤ κ — keep the κ largest-magnitude weights (eq. 4)."""
 
     domain = "vector"
+    # batched top-κ solver (threshold bisection on TPU) in the kernel
+    # dispatch registry. κ is deliberately NOT in batch_key(): it rides
+    # along as a traced per-item operand, so tasks that differ only in
+    # κ pack into ONE kernel launch (mixed-κ grouping) — under the
+    # vmap path they can't group at all, κ being baked into the trace.
+    solver = "topk_mask"
 
     def __init__(self, kappa: int):
         assert kappa >= 1
@@ -58,12 +64,22 @@ class ConstraintL0Pruning(CompressionScheme):
     def group_key(self):
         return ("prune-l0", self.kappa)
 
+    def batch_key(self):
+        return ("prune-l0",)
+
+    def batch_operands(self, n_items: int):
+        return (jnp.full((n_items,), self.kappa, jnp.int32),)
+
     def init(self, w, key=None):
         return self.compress(w, None)
 
     def compress(self, w, theta, mu=None):
         mask = topk_magnitude_mask(w, self.kappa)
         return {"theta": jnp.where(mask, w, 0.0)}
+
+    def compress_batched(self, solve, w, theta, operands, mu=None):
+        (kappa,) = operands
+        return {"theta": solve(w, kappa)}
 
     def decompress(self, theta):
         return theta["theta"]

@@ -100,6 +100,11 @@ class AdaptiveQuantization(CompressionScheme):
     """Learned codebook of size K via scalar k-means (paper eq. 2)."""
 
     domain = "vector"
+    # batched Lloyd solver in the kernel dispatch registry: on TPU the
+    # grouped C step runs one items-grid Pallas launch per group instead
+    # of vmapping kmeans_1d (see kernels/dispatch.py; the jnp backend is
+    # bit-identical to the vmap path)
+    solver = "kmeans_lloyd"
 
     def __init__(self, k: int = 2, iters: int = 25, use_dp_init: bool = False,
                  dp_bins: int = 2048):
@@ -112,6 +117,12 @@ class AdaptiveQuantization(CompressionScheme):
     def group_key(self):
         return ("quant-kmeans", self.k, self.iters)
 
+    def init_key(self):
+        # the DP warm start only changes init(), not compress(): keep it
+        # out of group_key (C-step groups merge across it) but in the
+        # init grouping identity (Θ^DC differs)
+        return (*self.group_key(), self.use_dp_init, self.dp_bins)
+
     def init(self, w, key=None):
         if self.use_dp_init:
             cb = optimal_codebook_dp(w, self.k, bins=self.dp_bins)
@@ -122,6 +133,13 @@ class AdaptiveQuantization(CompressionScheme):
 
     def compress(self, w, theta: QuantTheta, mu=None):
         cb, assign = kmeans_1d(w, theta.codebook, self.iters)
+        return QuantTheta(cb, assign)
+
+    def compress_batched(self, solve, w, theta: QuantTheta, operands,
+                         mu=None):
+        """One solver call warm-starts every item's codebook at once
+        (w (I, P), theta.codebook (I, K))."""
+        cb, assign = solve(w, theta.codebook, iters=self.iters)
         return QuantTheta(cb, assign)
 
     def decompress(self, theta: QuantTheta):

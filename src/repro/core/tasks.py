@@ -96,15 +96,24 @@ class CompressionTask:
         return {p: l.astype(jnp.float32)
                 for p, l in zip(self.paths, a_leaves)}
 
-    def group_signature(self, x) -> tuple | None:
+    def group_signature(self, x, batched: bool = False) -> tuple | None:
         """Hashable grouping signature, or None when not groupable.
 
         ``x`` may be a concrete array, a tracer, or a ShapeDtypeStruct —
         only ``.shape``/``.dtype`` are read. Two tasks with equal
         signatures are solved by one vmapped scheme call (see
         ``core.grouping``).
+
+        With ``batched=True`` (kernel dispatch active) a scheme that is
+        :meth:`CompressionScheme.kernel_dispatch_ready` groups by its
+        ``batch_key()`` instead — hyperparameters the batched solver
+        takes as per-item operands (κ) drop out of the identity, so
+        e.g. mixed-κ pruning tasks land in one group/kernel launch.
         """
-        key = self.scheme.group_key()
+        if batched and self.scheme.kernel_dispatch_ready():
+            key = ("batched", self.scheme.solver, self.scheme.batch_key())
+        else:
+            key = self.scheme.group_key()
         if key is None:
             return None
         # the scheme class is part of the identity: a subclass overriding

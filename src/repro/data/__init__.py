@@ -1,5 +1,6 @@
 from repro.data.pipeline import (
-    TokenStream, embedding_stream, gaussian_blobs, teacher_classification)
+    Prefetcher, TokenStream, embedding_stream, gaussian_blobs,
+    teacher_classification)
 
-__all__ = ["TokenStream", "embedding_stream", "gaussian_blobs",
-           "teacher_classification"]
+__all__ = ["Prefetcher", "TokenStream", "embedding_stream",
+           "gaussian_blobs", "teacher_classification"]

@@ -14,11 +14,76 @@ Offline container ⇒ no external datasets. Two generators:
 """
 from __future__ import annotations
 
+import threading
+from concurrent.futures import Future
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class Prefetcher:
+    """Lookahead wrapper for seekable batch sources.
+
+    The LC trainer's overlapped pipeline dispatches the C step at an LC
+    boundary and immediately starts the next L step — whose *first
+    microbatch* still pays the full host-side batch construction
+    latency. ``prefetch(step)`` starts that construction on a
+    background thread while the boundary work is in flight;
+    ``batch_at(step)`` consumes the result (or computes directly on a
+    miss — prefetching is purely an overlap optimization).
+
+    Correctness leans on the repo's data contract: ``batch_at`` is a
+    pure function of ``step``, so a prefetched batch equals the
+    directly-computed one bit-for-bit, retries/restores can re-request
+    any step, and entries prefetched for steps a restore rewound past
+    are simply dropped when they age out. Only the trainer thread calls
+    ``prefetch``/``batch_at``; the worker thread only runs the wrapped
+    source. Workers are deliberately *non-daemon*: a daemon thread
+    mid-jax-dispatch at interpreter teardown aborts the process inside
+    XLA ("terminate called without an active exception"), while a
+    non-daemon worker finishes its single batch (milliseconds) and
+    exits cleanly.
+    """
+
+    #: prefetched steps kept around before the oldest is dropped (a
+    #: rewind can strand entries; the slots are tiny host batches)
+    MAX_SLOTS = 4
+
+    def __init__(self, source):
+        self._source = source
+        self._fetch = (source.batch_at if hasattr(source, "batch_at")
+                       else source)
+        self._pending: dict[int, Future] = {}
+        self._lock = threading.Lock()
+
+    def prefetch(self, step: int) -> None:
+        """Start computing ``batch_at(step)`` in the background
+        (idempotent per step)."""
+        step = int(step)
+        with self._lock:
+            if step in self._pending:
+                return
+            fut: Future = Future()
+            self._pending[step] = fut
+            while len(self._pending) > self.MAX_SLOTS:
+                self._pending.pop(next(iter(self._pending)))
+
+        def work():
+            try:
+                fut.set_result(self._fetch(step))
+            except BaseException as e:  # surfaced on consumption
+                fut.set_exception(e)
+
+        threading.Thread(target=work, daemon=False).start()
+
+    def batch_at(self, step: int):
+        with self._lock:
+            fut = self._pending.pop(int(step), None)
+        if fut is not None:
+            return fut.result()
+        return self._fetch(int(step))
 
 
 @dataclass

@@ -1,4 +1,16 @@
 """Pallas TPU kernels for the paper's hot spots: the k-means C step, the
 codebook-dequant serving GEMM, and threshold-bisection pruning. Each
 subpackage ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper with CPU fallback), ref.py (pure-jnp oracle)."""
+wrapper with CPU fallback), ref.py (pure-jnp oracle).
+
+``dispatch`` is the kernel dispatch layer: schemes name a batched
+solver ("kmeans_lloyd", "topk_mask") and the registry resolves it per
+backend (compiled Pallas on TPU, interpret-mode Pallas or batched jnp
+on CPU) for the grouped C step.
+"""
+# NOTE: no function re-exports here — `from ...kmeans.ops import kmeans`
+# would shadow the `repro.kernels.kmeans` subpackage attribute on this
+# package and break `import repro.kernels.kmeans.ops`-style access.
+from repro.kernels import dispatch
+
+__all__ = ["dispatch"]

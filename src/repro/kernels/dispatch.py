@@ -1,0 +1,128 @@
+"""Kernel dispatch layer: named batched C-step solvers, per backend.
+
+The paper's decoupling claim — the C step is a swappable signal-
+compression subroutine — only stays free if the *implementation* of a
+solve can change underneath a scheme without the scheme (or the grouped
+engine, or the trainer) noticing. This registry is that seam:
+
+* a scheme declares a **solver name** (``CompressionScheme.solver``,
+  e.g. ``"kmeans_lloyd"``, ``"topk_mask"``) and implements
+  ``compress_batched`` against the solver's calling convention;
+* the grouped C step (``core/grouping.py``) resolves the name to a
+  concrete implementation **per backend** at trace time:
+
+  ============  =====================================================
+  backend       implementation
+  ============  =====================================================
+  ``pallas``    batched items-grid Pallas kernel, compiled (TPU)
+  ``interpret`` the same Pallas kernel, ``interpret=True`` (CPU/CI —
+                exercises the kernel path without a TPU)
+  ``jnp``       pure-jnp batched solver, bit-identical to the legacy
+                vmapped scheme program
+  ============  =====================================================
+
+* requests are resolved honestly: ``"auto"`` picks ``pallas`` on TPU
+  and ``jnp`` elsewhere; an explicit ``"pallas"`` off-TPU falls back to
+  ``interpret`` (the kernel still runs, slowly) rather than silently
+  switching algorithms; unknown solver names resolve to ``(None,
+  None)`` so callers fall back to the vmap path and
+  ``describe_groups`` reports what actually ran.
+
+Solver calling conventions (all arrays carry the packed leading item
+axis ``I``):
+
+* ``kmeans_lloyd(w (I,P) f32, codebooks0 (I,K) f32, *, iters) ->
+  (codebooks (I,K) f32, assign (I,P) i32)``
+* ``topk_mask(w (I,P) f32, kappa (I,) i32) -> theta (I,P) f32`` —
+  κ is a *traced per-item operand*, which is what lets tasks that
+  differ only in κ share one kernel launch (mixed-κ grouping).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+
+BACKENDS = ("jnp", "interpret", "pallas")
+#: user-facing request values (TrainerConfig.cstep_backend etc.)
+REQUESTS = ("auto", "jnp", "interpret", "pallas", "off")
+
+_REGISTRY: dict[str, dict[str, Callable]] = {}
+
+
+def register(solver: str, backend: str, fn: Callable) -> None:
+    """Register ``fn`` as the ``backend`` implementation of ``solver``."""
+    assert backend in BACKENDS, backend
+    _REGISTRY.setdefault(solver, {})[backend] = fn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(requested: str | None = "auto") -> str | None:
+    """Requested backend → the backend that will actually run.
+
+    ``None``/``"off"`` disables kernel dispatch entirely (pure vmapped
+    scheme programs, κ static). ``"auto"`` is ``pallas`` on TPU and
+    ``jnp`` elsewhere. ``"pallas"`` without a TPU degrades to
+    ``interpret`` — the kernel path, emulated — so tests and CI
+    exercise the same program the TPU compiles.
+    """
+    if requested is None or requested == "off":
+        return None
+    if requested not in REQUESTS:
+        raise ValueError(
+            f"cstep backend must be one of {REQUESTS}, got {requested!r}")
+    if requested == "auto":
+        return "pallas" if _on_tpu() else "jnp"
+    if requested == "pallas" and not _on_tpu():
+        return "interpret"
+    return requested
+
+
+def lookup(solver: str | None,
+           requested: str | None = "auto") -> tuple[Callable | None,
+                                                    str | None]:
+    """(implementation, actual backend) for a solver name, or
+    ``(None, None)`` when dispatch is off / the name is unregistered —
+    the caller then uses its vmap fallback. A backend gap (name known,
+    backend missing) falls back to the registered ``jnp`` solver so the
+    result is still batched."""
+    backend = resolve_backend(requested)
+    if backend is None or solver is None or solver not in _REGISTRY:
+        return None, None
+    impls = _REGISTRY[solver]
+    if backend not in impls:
+        if "jnp" in impls:
+            return impls["jnp"], "jnp"
+        return None, None
+    return impls[backend], backend
+
+
+def solver_table() -> dict[str, tuple[str, ...]]:
+    """{solver name: registered backends} — for docs and diagnostics."""
+    return {name: tuple(sorted(impls)) for name, impls in
+            sorted(_REGISTRY.items())}
+
+
+# ----------------------------------------------------------------------
+# built-in solvers (import at the bottom: ops modules must exist before
+# registration, and this module must define lookup() before core code
+# importing it mid-cycle resolves anything)
+# ----------------------------------------------------------------------
+from repro.kernels.kmeans import ops as _kops    # noqa: E402
+from repro.kernels.prune import ops as _pops     # noqa: E402
+
+register("kmeans_lloyd", "jnp", partial(_kops.kmeans_batched, impl="jnp"))
+register("kmeans_lloyd", "interpret",
+         partial(_kops.kmeans_batched, impl="interpret"))
+register("kmeans_lloyd", "pallas",
+         partial(_kops.kmeans_batched, impl="pallas"))
+
+register("topk_mask", "jnp", partial(_pops.topk_mask_batched, impl="jnp"))
+register("topk_mask", "interpret",
+         partial(_pops.topk_mask_batched, impl="interpret"))
+register("topk_mask", "pallas",
+         partial(_pops.topk_mask_batched, impl="pallas"))

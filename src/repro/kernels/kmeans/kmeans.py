@@ -12,6 +12,18 @@ this is a gather + atomicAdd pattern; the TPU-native shape is:
 * cluster moments use **grid-sequential accumulation** into the output
   ref — TPU Pallas grids execute sequentially per core, which replaces
   CUDA atomics (`@pl.when(step == 0)` zero-init, then `+=`).
+
+Two entry points share the kernel body:
+
+* :func:`kmeans_assign_moments` — one weight vector, grid ``(n_tiles,)``.
+* :func:`kmeans_assign_moments_batched` — a packed *group* of items
+  (the grouped C step's stacked leading axis), grid
+  ``(items, n_tiles)``. Each item brings its own VMEM-resident codebook
+  (BlockSpec ``(1, K)`` indexed by the item coordinate) and its own
+  moment accumulators; the tile coordinate is the fast axis, so the
+  per-item accumulation runs grid-sequentially exactly like the
+  unbatched kernel, and one ``pallas_call`` solves the whole group
+  instead of vmapping the jnp solver.
 """
 from __future__ import annotations
 
@@ -82,3 +94,67 @@ def kmeans_assign_moments(w: jnp.ndarray, codebook: jnp.ndarray,
         interpret=interpret,
     )(w2, cb2)
     return assign2.reshape(p), sums2[0], counts2[0]
+
+
+def _batched_kernel(w_ref, cb_ref, assign_ref, sums_ref, counts_ref,
+                    *, k: int):
+    tile = pl.program_id(1)                           # fast axis: tiles
+    w = w_ref[0]                                      # (ROWS, LANES) f32
+    cb = cb_ref[0]                                    # (K,) f32
+    d = (w[:, :, None] - cb[None, None, :]) ** 2      # (ROWS, LANES, K)
+    assign = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    assign_ref[0] = assign
+    onehot = (assign[:, :, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2))
+    onehot = onehot.astype(jnp.float32)
+    part_sums = jnp.sum(w[:, :, None] * onehot, axis=(0, 1))[None, :]
+    part_counts = jnp.sum(onehot, axis=(0, 1))[None, :]
+
+    # the item's accumulator block is revisited once per tile; the grid
+    # is row-major (tile fastest), so `tile == 0` re-inits per item
+    @pl.when(tile == 0)
+    def _init():
+        sums_ref[...] = part_sums
+        counts_ref[...] = part_counts
+
+    @pl.when(tile != 0)
+    def _accum():
+        sums_ref[...] += part_sums
+        counts_ref[...] += part_counts
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def kmeans_assign_moments_batched(w: jnp.ndarray, codebooks: jnp.ndarray,
+                                  interpret: bool = True):
+    """w: (I, P) f32 (P % (ROWS·LANES) == 0 after ops.py padding);
+    codebooks: (I, K) f32 → (assign (I, P) i32, sums (I, K),
+    counts (I, K)) — one pallas_call for the whole packed item group."""
+    n_items, p = w.shape
+    k = codebooks.shape[-1]
+    tile = ROWS * LANES
+    assert p % tile == 0, f"pad to a multiple of {tile} in ops.py"
+    n_tiles = p // tile
+    w3 = w.astype(jnp.float32).reshape(n_items, n_tiles * ROWS, LANES)
+    cb2 = codebooks.astype(jnp.float32).reshape(n_items, k)
+
+    assign3, sums2, counts2 = pl.pallas_call(
+        partial(_batched_kernel, k=k),
+        grid=(n_items, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),  # per-item VMEM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),  # per-item accum
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_items, n_tiles * ROWS, LANES),
+                                 jnp.int32),
+            jax.ShapeDtypeStruct((n_items, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_items, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w3, cb2)
+    return assign3.reshape(n_items, p), sums2, counts2

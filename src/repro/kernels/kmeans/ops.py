@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.kmeans import ref
-from repro.kernels.kmeans.kmeans import LANES, ROWS, kmeans_assign_moments
+from repro.kernels.kmeans.kmeans import (
+    LANES, ROWS, kmeans_assign_moments, kmeans_assign_moments_batched)
 
 
 def _on_tpu() -> bool:
@@ -59,4 +60,63 @@ def kmeans(w: jnp.ndarray, codebook0: jnp.ndarray, iters: int = 25,
     for _ in range(iters):
         cb = lloyd_step(w, cb, use_pallas)
     assign, _, _ = assign_moments(w, cb, use_pallas)
+    return cb, assign
+
+
+# ----------------------------------------------------------------------
+# batched solver — the "kmeans_lloyd" entry of the kernel dispatch layer
+# ----------------------------------------------------------------------
+def assign_moments_batched(w: jnp.ndarray, codebooks: jnp.ndarray,
+                           interpret: bool = True):
+    """Batched assignment + moments over a packed (I, P) item stack;
+    pads each row internally (pad values clone each item's
+    ``codebook[0]`` so padded elements land in cluster 0, then their
+    contribution is subtracted from the moments)."""
+    n_items, p = w.shape
+    tile = ROWS * LANES
+    pad = (-p) % tile
+    if pad:
+        wp = jnp.concatenate(
+            [w, jnp.broadcast_to(codebooks[:, :1], (n_items, pad))
+             .astype(w.dtype)], axis=1)
+    else:
+        wp = w
+    assign, sums, counts = kmeans_assign_moments_batched(
+        wp, codebooks, interpret=interpret)
+    if pad:
+        sums = sums.at[:, 0].add(-float(pad) * codebooks[:, 0])
+        counts = counts.at[:, 0].add(-float(pad))
+        assign = assign[:, :p]
+    return assign, sums, counts
+
+
+def kmeans_batched(w: jnp.ndarray, codebooks0: jnp.ndarray,
+                   iters: int = 25, impl: str = "jnp"):
+    """Per-item Lloyd loop over a packed (I, P) item stack with per-item
+    (I, K) warm-start codebooks → (codebooks (I, K), assign (I, P)).
+
+    ``impl``: ``"jnp"`` vmaps the core compare-count solver
+    (bit-identical to the per-task scheme path); ``"interpret"`` /
+    ``"pallas"`` run the batched items-grid kernel — one pallas_call per
+    Lloyd step for the whole group, per-item codebooks VMEM-resident.
+    The kernel's moment accumulation order differs from the jnp masked
+    reduce, so codebooks agree to float tolerance (not bitwise); see
+    tests/test_kernel_dispatch.py for the enforced bounds.
+    """
+    if impl == "jnp":
+        # deferred import: kernels must stay importable without core
+        # (core.grouping imports the dispatch layer at module load)
+        from repro.core.schemes.quantize import kmeans_1d
+        return jax.vmap(lambda wi, ci: kmeans_1d(wi, ci, iters))(
+            w, codebooks0)
+    interpret = impl != "pallas"
+    w = w.astype(jnp.float32)
+    cb = jnp.sort(codebooks0.astype(jnp.float32), axis=-1)
+    for _ in range(iters):
+        _, sums, counts = assign_moments_batched(w, cb,
+                                                 interpret=interpret)
+        cb = jnp.sort(jnp.where(counts > 0,
+                                sums / jnp.maximum(counts, 1.0), cb),
+                      axis=-1)
+    assign, _, _ = assign_moments_batched(w, cb, interpret=interpret)
     return cb, assign

@@ -22,3 +22,11 @@ def kmeans_assign_moments_ref(w: jnp.ndarray, codebook: jnp.ndarray):
 def lloyd_step_ref(w: jnp.ndarray, codebook: jnp.ndarray):
     _, sums, counts = kmeans_assign_moments_ref(w, codebook)
     return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), codebook)
+
+
+def kmeans_assign_moments_batched_ref(w: jnp.ndarray,
+                                      codebooks: jnp.ndarray):
+    """Per-item oracle for the batched items-grid kernel:
+    w (I, P), codebooks (I, K) → (assign (I, P), sums (I, K),
+    counts (I, K))."""
+    return jax.vmap(kmeans_assign_moments_ref)(w, codebooks)

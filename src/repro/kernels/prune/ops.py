@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.prune import ref
-from repro.kernels.prune.prune import LANES, ROWS, count_above, mask_apply
+from repro.kernels.prune.prune import (
+    LANES, ROWS, count_above, count_above_batched, mask_apply,
+    mask_apply_batched)
 
 
 def _on_tpu() -> bool:
@@ -61,3 +63,68 @@ def topk_mask(w: jnp.ndarray, kappa: int, iters: int = 30,
     # top-κ projection).
     out = mask_apply(wp, hi, interpret=interp)[:p]
     return out.reshape(w.shape)
+
+
+# ----------------------------------------------------------------------
+# batched solver — the "topk_mask" entry of the kernel dispatch layer
+# ----------------------------------------------------------------------
+def _pad_batched(w):
+    n_items, p = w.shape
+    tile = ROWS * LANES
+    padn = (-p) % tile
+    if padn:
+        w = jnp.concatenate(
+            [w, jnp.zeros((n_items, padn), w.dtype)], axis=1)
+    return w, p
+
+
+def topk_mask_batched(w: jnp.ndarray, kappa: jnp.ndarray, iters: int = 30,
+                      impl: str = "jnp") -> jnp.ndarray:
+    """Per-item top-κ mask over a packed item stack.
+
+    ``w``: (I, P) f32; ``kappa``: (I,) — a *traced* per-item operand, so
+    tasks differing only in κ share one launch (mixed-κ grouping).
+
+    ``impl``: ``"jnp"`` (sort + gather, bit-exact vs the per-task
+    scheme solver), ``"interpret"`` (Pallas kernels in interpret mode —
+    the CPU/CI validation path), or ``"pallas"`` (compiled, TPU):
+    per-item threshold bisection over :func:`count_above_batched`, then
+    one :func:`mask_apply_batched` sweep.
+
+    The kernel path bisects on the *feasibility* predicate
+    ``count(|w| ≥ t) ≥ κ`` and masks with ``|w| ≥ lo`` where ``lo`` is
+    the best feasible threshold seen — so it never keeps fewer than κ
+    weights. This matters on magnitude ties at the κ boundary (±w pairs
+    are exact-magnitude ties): a strict ``>`` mask at the converged
+    threshold would drop the whole tied class, pruning the largest
+    weights. Like the jnp sort path, ties at the threshold over-keep
+    (all tied weights survive) — the paper's top-κ projection allows
+    any tie-break; near-ties inside the final unconverged interval
+    (sub-float-ulp after ``iters`` halvings) share that caveat.
+    """
+    w = w.astype(jnp.float32)
+    kappa = jnp.asarray(kappa, jnp.int32)
+    if impl == "jnp":
+        return ref.topk_mask_batched_ref(w, kappa)
+    interp = impl != "pallas"
+
+    wp, p = _pad_batched(w)
+    # invariant: lo feasible (count_ge(lo) ≥ κ — true at 0 since κ ≤ P),
+    # hi infeasible (strictly above the max magnitude)
+    hi = jnp.max(jnp.abs(w), axis=-1) * 2.0 + 1.0   # (I,)
+    lo = jnp.zeros_like(hi)
+    kf = kappa.astype(jnp.float32)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = 0.5 * (lo_ + hi_)
+        c = count_above_batched(wp, mid, interpret=interp,
+                                strict=False)        # count(|w| ≥ mid)
+        feasible = c >= kf
+        lo_ = jnp.where(feasible, mid, lo_)
+        hi_ = jnp.where(feasible, hi_, mid)
+        return lo_, hi_
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return mask_apply_batched(wp, lo, interpret=interp,
+                              strict=False)[:, :p]

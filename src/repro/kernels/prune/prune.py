@@ -7,6 +7,15 @@ compare per element, grid-sequential scalar accumulation — the same
 pattern as the k-means moments), then one `mask-apply` pass. 26 cheap
 HBM sweeps beat a distributed sort, and every pass is embarrassingly
 shardable (the count psums across shards).
+
+Batched variants (:func:`count_above_batched`,
+:func:`mask_apply_batched`) add an **items grid dimension** for the
+grouped C step: grid ``(items, n_tiles)``, a per-item threshold block in
+VMEM, a per-item count accumulator re-initialized when the (fast) tile
+coordinate wraps. The threshold — and therefore κ, which the bisection
+driver in ops.py compares the counts against — is a *traced per-item
+operand*, which is what lets tasks that differ only in κ share one
+kernel launch (mixed-κ grouping).
 """
 from __future__ import annotations
 
@@ -83,3 +92,83 @@ def mask_apply(w: jnp.ndarray, t: jnp.ndarray, interpret: bool = True):
         interpret=interpret,
     )(w2, t.reshape(1, 1).astype(jnp.float32))
     return out.reshape(p)
+
+
+# ----------------------------------------------------------------------
+# batched (items-grid) variants — one pallas_call per packed group.
+# ``strict`` picks the comparison (|w| > t vs |w| ≥ t): the bisection
+# driver needs the ≥ form so threshold ties keep *at least* κ weights
+# (the jnp top-κ semantics) instead of dropping the whole tied class.
+# ----------------------------------------------------------------------
+def _count_batched_kernel(w_ref, t_ref, out_ref, *, strict: bool):
+    tile = pl.program_id(1)                      # fast axis: tiles
+    w = w_ref[0]                                 # (ROWS, LANES)
+    t = t_ref[0, 0]                              # this item's threshold
+    keep = jnp.abs(w) > t if strict else jnp.abs(w) >= t
+    c = jnp.sum(keep.astype(jnp.float32))[None, None]
+
+    @pl.when(tile == 0)
+    def _init():
+        out_ref[...] = c
+
+    @pl.when(tile != 0)
+    def _accum():
+        out_ref[...] += c
+
+
+def _mask_batched_kernel(w_ref, t_ref, out_ref, *, strict: bool):
+    w = w_ref[0]
+    t = t_ref[0, 0]
+    keep = jnp.abs(w) > t if strict else jnp.abs(w) >= t
+    out_ref[0] = jnp.where(keep, w, 0.0)
+
+
+def _tiled(w: jnp.ndarray):
+    n_items, p = w.shape
+    tile = ROWS * LANES
+    assert p % tile == 0, f"pad to a multiple of {tile} in ops.py"
+    n_tiles = p // tile
+    return (w.astype(jnp.float32).reshape(n_items, n_tiles * ROWS, LANES),
+            n_tiles)
+
+
+@partial(jax.jit, static_argnames=("interpret", "strict"))
+def count_above_batched(w: jnp.ndarray, t: jnp.ndarray,
+                        interpret: bool = True, strict: bool = True):
+    """w: (I, P) padded; t: (I,) per-item thresholds → counts (I,) f32."""
+    n_items, p = w.shape
+    w3, n_tiles = _tiled(w)
+    out = pl.pallas_call(
+        partial(_count_batched_kernel, strict=strict),
+        grid=(n_items, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_items, 1), jnp.float32),
+        interpret=interpret,
+    )(w3, t.reshape(n_items, 1).astype(jnp.float32))
+    return out[:, 0]
+
+
+@partial(jax.jit, static_argnames=("interpret", "strict"))
+def mask_apply_batched(w: jnp.ndarray, t: jnp.ndarray,
+                       interpret: bool = True, strict: bool = True):
+    """w: (I, P) padded; t: (I,) → w·1[|w| > t_i] per item, (I, P)
+    (``strict=False``: |w| ≥ t_i)."""
+    n_items, p = w.shape
+    w3, n_tiles = _tiled(w)
+    out = pl.pallas_call(
+        partial(_mask_batched_kernel, strict=strict),
+        grid=(n_items, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_items, n_tiles * ROWS, LANES), jnp.float32),
+        interpret=interpret,
+    )(w3, t.reshape(n_items, 1).astype(jnp.float32))
+    return out.reshape(n_items, p)

@@ -16,3 +16,20 @@ def topk_threshold_ref(w: jnp.ndarray, kappa: int) -> jnp.ndarray:
     """Exact κ-th largest |w| (the oracle the bisection must bracket)."""
     a = jnp.sort(jnp.abs(w.ravel()))[::-1]
     return a[kappa - 1]
+
+
+def topk_mask_batched_ref(w: jnp.ndarray, kappa: jnp.ndarray) -> jnp.ndarray:
+    """Per-item top-κ mask with κ a *traced* (I,) operand.
+
+    Sort each row's magnitudes descending, gather the κ_i-th largest as
+    the per-item threshold, keep ``|w| >= t_i``. The threshold value is
+    the exact order statistic — identical to ``lax.top_k(a, κ)[0][-1]``
+    — so this is the bit-exact jnp backend for the ``topk_mask`` solver
+    (the kernel path bisects to the same statistic and keeps exactly κ
+    on distinct magnitudes).
+    """
+    a = jnp.abs(w.astype(jnp.float32))
+    a_desc = jnp.sort(a, axis=-1)[:, ::-1]
+    idx = jnp.maximum(kappa.astype(jnp.int32) - 1, 0)[:, None]
+    thresh = jnp.take_along_axis(a_desc, idx, axis=-1)     # (I, 1)
+    return jnp.where(a >= thresh, w, 0.0)

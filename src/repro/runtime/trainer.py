@@ -42,6 +42,7 @@ from repro.checkpoint import CheckpointManager
 from repro.core.algorithm import LCAlgorithm
 from repro.core.state import probe_is_ready, ready_probe
 from repro.core.tasks import get_path
+from repro.data.pipeline import Prefetcher
 from repro.distributed.sharding import use_mesh
 from repro.launch.steps import make_train_step, stable_lc_refs
 from repro.optim import AdamW
@@ -75,6 +76,16 @@ class TrainerConfig:
     # of the next L step; None = swap as soon as the C-step future
     # resolves (polled non-blockingly between microbatches).
     swap_after: int | None = None
+    # kernel dispatch backend for the C step's named scheme solvers
+    # ("auto" | "jnp" | "interpret" | "pallas" | "off") — threaded to
+    # LCAlgorithm.set_backend when set; None (default) inherits
+    # whatever backend the algorithm was constructed with, so an
+    # explicit LCAlgorithm(cstep_backend=...) is never clobbered.
+    cstep_backend: str | None = None
+    # overlap the next L step's first batch construction with the LC
+    # boundary dispatch (Prefetcher in data/pipeline.py); the data
+    # contract (batch_at pure in step) makes this bit-neutral.
+    prefetch_data: bool = True
 
 
 class LCTrainer:
@@ -97,6 +108,13 @@ class LCTrainer:
         if self.tcfg.overlap not in ("off", "on"):
             raise ValueError(
                 f"overlap must be 'off' or 'on', got {self.tcfg.overlap!r}")
+        if self.tcfg.cstep_backend is not None \
+                and self.tcfg.cstep_backend != lc.cstep_backend:
+            # an explicit trainer request wins: rebuilds the jitted
+            # steps so the solver backend is baked into the C-step HLO
+            lc.set_backend(self.tcfg.cstep_backend)
+        self._prefetcher = (Prefetcher(data)
+                            if self.tcfg.prefetch_data else None)
         self.optimizer = optimizer or AdamW()
         self.retry = RetryPolicy()
         self.straggler = StragglerMonitor(
@@ -138,8 +156,11 @@ class LCTrainer:
     # ------------------------------------------------------------------
     def _one_step(self, state, step: int):
         self.faults.maybe_fail(step)
-        batch = self.data.batch_at(step) if hasattr(self.data, "batch_at") \
-            else self.data(step)
+        if self._prefetcher is not None:
+            batch = self._prefetcher.batch_at(step)
+        else:
+            batch = self.data.batch_at(step) \
+                if hasattr(self.data, "batch_at") else self.data(step)
         return self._train_step(state, batch)
 
     def _restore_state(self, state):
@@ -383,6 +404,13 @@ class LCTrainer:
                 "t_dispatch": t_dispatch, "t_ready": None,
                 "probe": ready_probe(lc_state),
             }
+            # the C step also overlaps *data loading*: start building
+            # the next L step's first microbatch while the boundary
+            # chain is in flight (global_step is exactly the step index
+            # the next _l_step consumes first). The final boundary has
+            # no next L step — don't strand a batch nobody consumes.
+            if self._prefetcher is not None and k + 1 < len(schedule):
+                self._prefetcher.prefetch(global_step)
 
         # drain the final boundary (no L step left to overlap with);
         # an empty μ schedule never dispatched one

@@ -1,0 +1,619 @@
+"""Kernel dispatch layer: batched items-grid kernels vs jnp solvers.
+
+Contract under test (docs/architecture.md "The kernel dispatch layer"):
+
+* the ``jnp`` backend is **bit-identical** to the legacy vmapped scheme
+  programs (and therefore to the per-task path);
+* the ``interpret``/``pallas`` backends run the batched Pallas kernels —
+  top-κ masks must select the identical support (exact threshold), the
+  k-means Lloyd loop must agree to documented float tolerance (the
+  kernel's grid-sequential moment accumulation orders sums differently);
+* both dispatch paths (grouped and per-task) go through the same named
+  solvers;
+* κ is a traced per-item operand, so mixed-κ tasks share one group —
+  the grouping that used to be impossible with κ baked into the trace.
+
+Everything runs in Pallas interpret mode on CPU; compiled-kernel
+differentials are TPU-only and skipped cleanly elsewhere.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsStacked, AsVector, CompressionTask, LCAlgorithm, build_groups,
+    describe_groups)
+from repro.core.grouping import solve_task
+from repro.core.schemes import AdaptiveQuantization, ConstraintL0Pruning
+from repro.data import Prefetcher, TokenStream
+from repro.kernels import dispatch
+from repro.kernels.kmeans import ops as kops
+from repro.kernels.kmeans import ref as kref
+from repro.kernels.prune import ops as pops
+from repro.kernels.prune import ref as pref
+
+KEY = jax.random.PRNGKey(0)
+
+# documented tolerance for kernel-vs-jnp k-means codebooks: the batched
+# kernel accumulates moments tile-sequentially, the jnp solver as one
+# masked reduce — identical assignments, float-order-different sums
+KMEANS_CB_ATOL = 1e-3
+
+
+# ----------------------------------------------------------------------
+# batched kmeans kernel vs oracle (incl. ragged last tiles)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("i,p,k", [
+    (1, 2048, 4), (3, 8192, 16), (5, 5000, 8),     # 5000: ragged tile
+    (2, 1023, 4), (4, 1024, 32),
+])
+def test_batched_kmeans_assign_moments_vs_ref(i, p, k):
+    kw, kc = jax.random.split(jax.random.fold_in(KEY, i * p * k))
+    w = jax.random.normal(kw, (i, p))
+    cb = jnp.sort(jax.random.normal(kc, (i, k)), axis=-1)
+    a1, s1, c1 = kops.assign_moments_batched(w, cb, interpret=True)
+    a2, s2, c2 = kref.kmeans_assign_moments_batched_ref(w, cb)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=3e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)
+
+
+def test_batched_kmeans_matches_item_loop():
+    """The batched kernel is the unbatched kernel per item — batch
+    composition must not leak between items."""
+    w = jax.random.normal(KEY, (4, 4096))
+    cb = jnp.sort(jax.random.normal(jax.random.fold_in(KEY, 7), (4, 8)),
+                  axis=-1)
+    ab, sb, cb_ = kops.assign_moments_batched(w, cb, interpret=True)
+    for i in range(4):
+        ai, si, ci = kops.assign_moments(w[i], cb[i], use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(ab[i]), np.asarray(ai))
+        np.testing.assert_allclose(np.asarray(sb[i]), np.asarray(si),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(cb_[i]), np.asarray(ci),
+                                   rtol=1e-6)
+
+
+def test_batched_kmeans_lloyd_loop_vs_jnp_solver():
+    w = jax.random.normal(KEY, (3, 8192))
+    cb0 = jnp.sort(jax.random.normal(jax.random.fold_in(KEY, 3), (3, 8)),
+                   axis=-1)
+    cb_k, as_k = kops.kmeans_batched(w, cb0, iters=15, impl="interpret")
+    cb_j, as_j = kops.kmeans_batched(w, cb0, iters=15, impl="jnp")
+    np.testing.assert_allclose(np.asarray(cb_k), np.asarray(cb_j),
+                               atol=KMEANS_CB_ATOL)
+    # assignment disagreements only where the drifted codebooks are
+    # genuinely ambiguous — distortion must match to the same tolerance
+    d_k = jnp.sum((w - jnp.take_along_axis(cb_k, as_k, axis=-1)) ** 2)
+    d_j = jnp.sum((w - jnp.take_along_axis(cb_j, as_j, axis=-1)) ** 2)
+    np.testing.assert_allclose(float(d_k), float(d_j), rtol=1e-4)
+
+
+def test_jnp_kmeans_solver_is_vmap_of_core_solver():
+    """The dispatch layer's jnp backend IS the legacy solver — bitwise."""
+    from repro.core.schemes.quantize import kmeans_1d
+    w = jax.random.normal(KEY, (3, 2048))
+    cb0 = jax.random.normal(jax.random.fold_in(KEY, 9), (3, 4))
+    cb_b, as_b = kops.kmeans_batched(w, cb0, iters=5, impl="jnp")
+    for i in range(3):
+        cb_i, as_i = kmeans_1d(w[i], cb0[i], iters=5)
+        np.testing.assert_array_equal(np.asarray(cb_b[i]),
+                                      np.asarray(cb_i))
+        np.testing.assert_array_equal(np.asarray(as_b[i]),
+                                      np.asarray(as_i))
+
+
+# ----------------------------------------------------------------------
+# batched prune kernels vs oracle (incl. mixed κ, ragged tiles)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("t_vals", [(0.1, 0.7), (0.0, 2.5), (1.0, 1.0)])
+def test_batched_count_mask_kernels_vs_ref(t_vals):
+    from repro.kernels.prune.prune import (
+        LANES, ROWS, count_above_batched, mask_apply_batched)
+    w = jax.random.normal(jax.random.fold_in(KEY, 11),
+                          (2, 4 * ROWS * LANES))
+    t = jnp.array(t_vals, jnp.float32)
+    counts = count_above_batched(w, t, interpret=True)
+    masks = mask_apply_batched(w, t, interpret=True)
+    for i in range(2):
+        np.testing.assert_allclose(
+            float(counts[i]), float(pref.count_above_ref(w[i], t[i])),
+            rtol=0)
+        np.testing.assert_allclose(
+            np.asarray(masks[i]),
+            np.asarray(pref.mask_apply_ref(w[i], t[i])), rtol=0)
+
+
+@pytest.mark.parametrize("p", [3000, 4096, 1023])  # 3000/1023: ragged
+def test_batched_topk_kernel_vs_jnp_mixed_kappa(p):
+    w = jax.random.normal(jax.random.fold_in(KEY, p), (4, p))
+    kappa = jnp.array([1, 17, p // 3, p - 1], jnp.int32)
+    mj = pops.topk_mask_batched(w, kappa, impl="jnp")
+    mi = pops.topk_mask_batched(w, kappa, impl="interpret")
+    # identical support (exact order-statistic threshold), exact values
+    np.testing.assert_array_equal(np.asarray(mj != 0),
+                                  np.asarray(mi != 0))
+    np.testing.assert_array_equal(np.asarray(mj), np.asarray(mi))
+    for i in range(4):
+        assert int(jnp.sum(mi[i] != 0)) == int(kappa[i])
+
+
+def test_jnp_topk_solver_matches_pertask_scheme_bitwise():
+    """sort+gather threshold == lax.top_k threshold — the bit-exactness
+    the default (CPU auto→jnp) dispatch path relies on."""
+    w = jax.random.normal(jax.random.fold_in(KEY, 21), (3, 777))
+    kappa = jnp.array([5, 50, 500], jnp.int32)
+    mj = pops.topk_mask_batched(w, kappa, impl="jnp")
+    ref_scheme = [ConstraintL0Pruning(kappa=int(k)) for k in kappa]
+    for i, s in enumerate(ref_scheme):
+        exp = s.compress(w[i], None)["theta"]
+        np.testing.assert_array_equal(np.asarray(mj[i]), np.asarray(exp))
+
+
+def test_batched_topk_kernel_threshold_ties_keep_at_least_kappa():
+    """Exact-magnitude ties at the κ boundary (±w pairs) must over-keep
+    like the jnp path, never under-keep: a strict > mask at the
+    converged threshold would prune the largest weights entirely."""
+    w = jnp.array([[2.0, -2.0, 1.0, 0.5],
+                   [3.0, 3.0, -3.0, 0.1]], jnp.float32)
+    kappa = jnp.array([1, 2], jnp.int32)
+    mj = pops.topk_mask_batched(w, kappa, impl="jnp")
+    mi = pops.topk_mask_batched(w, kappa, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(mj), np.asarray(mi))
+    # row 0: both tied ±2.0 survive (κ=1 over-keeps the tied class);
+    # row 1: all three tied 3.0s survive (κ=2)
+    assert int(jnp.sum(mi[0] != 0)) == 2
+    assert int(jnp.sum(mi[1] != 0)) == 3
+    np.testing.assert_array_equal(np.asarray(mi[0]),
+                                  np.asarray([2.0, -2.0, 0.0, 0.0]))
+
+
+def test_topk_traced_kappa_under_jit():
+    """κ is a traced operand: one compiled program serves every κ."""
+    w = jax.random.normal(KEY, (2, 1024))
+    f = jax.jit(lambda w_, k_: pops.topk_mask_batched(w_, k_, impl="jnp"))
+    for ks in ((3, 900), (64, 64)):
+        out = f(w, jnp.array(ks, jnp.int32))
+        assert [int(jnp.sum(out[i] != 0)) for i in range(2)] == list(ks)
+
+
+# ----------------------------------------------------------------------
+# registry + backend resolution (honest fallbacks)
+# ----------------------------------------------------------------------
+def test_registry_has_builtin_solvers():
+    table = dispatch.solver_table()
+    assert table["kmeans_lloyd"] == ("interpret", "jnp", "pallas")
+    assert table["topk_mask"] == ("interpret", "jnp", "pallas")
+
+
+def test_backend_resolution():
+    on_tpu = jax.default_backend() == "tpu"
+    assert dispatch.resolve_backend(None) is None
+    assert dispatch.resolve_backend("off") is None
+    assert dispatch.resolve_backend("jnp") == "jnp"
+    assert dispatch.resolve_backend("interpret") == "interpret"
+    assert dispatch.resolve_backend("auto") == (
+        "pallas" if on_tpu else "jnp")
+    # an explicit pallas request off-TPU degrades to interpret — the
+    # same kernel, emulated — never to a silent algorithm switch
+    assert dispatch.resolve_backend("pallas") == (
+        "pallas" if on_tpu else "interpret")
+    with pytest.raises(ValueError):
+        dispatch.resolve_backend("cuda")
+
+
+def test_algorithm_validates_backend_eagerly():
+    """A typo'd backend must fail at construction, not minutes later
+    inside the first C-step jit trace."""
+    tasks = [CompressionTask("a", "^a$", AsVector(),
+                             ConstraintL0Pruning(kappa=4))]
+    with pytest.raises(ValueError, match="cstep_backend"):
+        LCAlgorithm(tasks, [1e-2], cstep_backend="pallsa")
+    with pytest.raises(ValueError, match="cstep_backend"):
+        LCAlgorithm(tasks, [1e-2]).set_backend("gpu")
+    # the eager allowlist must track the dispatch registry's REQUESTS
+    assert set(dispatch.REQUESTS) == {"auto", "jnp", "interpret",
+                                      "pallas", "off"}
+
+
+def test_core_import_does_not_pull_pallas():
+    """`import repro.core` with dispatch off must not eagerly import
+    the Pallas kernel modules (they load lazily on first solver
+    lookup)."""
+    import subprocess
+    import sys
+    code = ("import sys; import repro.core; "
+            "assert not any('pallas' in m for m in sys.modules), "
+            "[m for m in sys.modules if 'pallas' in m]")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True,
+                          env={**__import__('os').environ})
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_theta_dtype_stable_across_backends_for_bf16_params():
+    """Views cast every compressible to f32 before a scheme sees it, so
+    Θ keeps one dtype from init through every C step on every backend —
+    no mid-run retrace/reshard from a dtype flip, bf16 params included."""
+    params = {n: jax.random.normal(jax.random.fold_in(KEY, i),
+                                   (256,)).astype(jnp.bfloat16)
+              for i, n in enumerate(("a", "b"))}
+    for backend in ("off", "jnp", "interpret"):
+        lc = LCAlgorithm(
+            [CompressionTask(n, f"^{n}$", AsVector(),
+                             ConstraintL0Pruning(kappa=16))
+             for n in ("a", "b")], [1e-2], cstep_backend=backend)
+        st0 = lc.init(params)
+        st1 = lc.c_step(params, st0)
+        for st in (st0, st1):
+            assert st["tasks"]["a"]["theta"]["theta"].dtype == \
+                jnp.float32, backend
+
+
+def test_lookup_unknown_solver_falls_back_to_vmap_path():
+    fn, backend = dispatch.lookup("no_such_solver", "auto")
+    assert fn is None and backend is None
+    fn, backend = dispatch.lookup(None, "auto")
+    assert fn is None and backend is None
+
+
+def test_describe_groups_reports_solver_and_backend():
+    params = {f"l{i}": jax.random.normal(jax.random.fold_in(KEY, i),
+                                         (256,)) for i in range(3)}
+    tasks = [CompressionTask(f"pr{i}", f"^l{i}$", AsVector(),
+                             ConstraintL0Pruning(kappa=8 * (i + 1)))
+             for i in range(3)]
+    for i, t in enumerate(tasks):
+        t.paths = [f"l{i}"]
+    xs = {t.name: params[f"l{i}"] for i, t in enumerate(tasks)}
+    # off: three κ-distinct groups, no solver
+    off = describe_groups(tasks, xs, backend="off")
+    assert len(off) == 3
+    assert all(g["solver"] is None and g["backend"] is None for g in off)
+    # interpret: one mixed-κ group, solver + actual backend reported
+    on = describe_groups(tasks, xs, backend="interpret")
+    assert len(on) == 1
+    assert on[0]["solver"] == "topk_mask"
+    assert on[0]["backend"] == "interpret"
+    assert on[0]["grouped"] and on[0]["items"] == 3
+    # a pallas request reports what actually runs
+    hw = describe_groups(tasks, xs, backend="pallas")
+    assert hw[0]["backend"] == (
+        "pallas" if jax.default_backend() == "tpu" else "interpret")
+
+
+# ----------------------------------------------------------------------
+# mixed-κ grouping through the full C step
+# ----------------------------------------------------------------------
+def _mixed_kappa_setup(n=4, p=512):
+    params = {f"l{i}": jax.random.normal(jax.random.fold_in(KEY, 31 + i),
+                                         (p,)) for i in range(n)}
+    tasks = lambda: [CompressionTask(f"pr{i}", f"^l{i}$", AsVector(),
+                                     ConstraintL0Pruning(kappa=16 * (i + 1)))
+                     for i in range(n)]
+    return params, tasks
+
+
+def test_mixed_kappa_tasks_share_one_group_and_launch():
+    """κ∈{16,32,48,64} → four groups without dispatch (κ is static in
+    group_key), ONE group with it (κ rides as a per-item operand)."""
+    params, tasks = _mixed_kappa_setup()
+    lc_off = LCAlgorithm(tasks(), [1e-2], cstep_backend="off")
+    lc_on = LCAlgorithm(tasks(), [1e-2], cstep_backend="interpret")
+    assert len(lc_off.group_summary(params)) == 4
+    summary = lc_on.group_summary(params)
+    assert len(summary) == 1 and summary[0]["grouped"]
+
+    st_off = lc_off.c_step(params, lc_off.init(params))
+    st_on = lc_on.c_step(params, lc_on.init(params))
+    for name in st_off["tasks"]:
+        np.testing.assert_array_equal(
+            np.asarray(st_off["tasks"][name]["theta"]["theta"]),
+            np.asarray(st_on["tasks"][name]["theta"]["theta"]),
+            err_msg=name)
+
+
+def test_mixed_kappa_jnp_backend_bitwise_vs_off():
+    """The default CPU backend (auto→jnp) must not move a single bit
+    relative to the pre-dispatch engine, mixed κ included."""
+    params, tasks = _mixed_kappa_setup()
+    lc_off = LCAlgorithm(tasks(), [1e-2, 1.5e-2], cstep_backend="off")
+    lc_jnp = LCAlgorithm(tasks(), [1e-2, 1.5e-2], cstep_backend="jnp")
+    s_off, s_jnp = lc_off.init(params), lc_jnp.init(params)
+    for _ in range(2):
+        s_off = lc_off.multiplier_step(params, lc_off.c_step(params, s_off))
+        s_jnp = lc_jnp.multiplier_step(params, lc_jnp.c_step(params, s_jnp))
+    flat_o = jax.tree_util.tree_leaves_with_path(s_off)
+    flat_j = jax.tree_util.tree_leaves_with_path(s_jnp)
+    assert len(flat_o) == len(flat_j)
+    for (ko, vo), (kj, vj) in zip(flat_o, flat_j):
+        assert ko == kj
+        np.testing.assert_array_equal(np.asarray(vo), np.asarray(vj),
+                                      err_msg=jax.tree_util.keystr(ko))
+
+
+# ----------------------------------------------------------------------
+# both dispatch paths (grouped + per-task) hit the kernels
+# ----------------------------------------------------------------------
+def _quant_prune_tasks():
+    return ([CompressionTask(f"q{i}", f"^q{i}$", AsVector(),
+                             AdaptiveQuantization(k=4, iters=5))
+             for i in range(2)]
+            + [CompressionTask(f"p{i}", f"^p{i}$", AsVector(),
+                               ConstraintL0Pruning(kappa=32))
+               for i in range(2)]
+            + [CompressionTask("st", r"^stack$", AsStacked("vector"),
+                               ConstraintL0Pruning(kappa=20))])
+
+
+def _quant_prune_params():
+    return {
+        **{f"q{i}": jax.random.normal(jax.random.fold_in(KEY, 61 + i),
+                                      (512,)) for i in range(2)},
+        **{f"p{i}": jax.random.normal(jax.random.fold_in(KEY, 71 + i),
+                                      (384,)) for i in range(2)},
+        "stack": jax.random.normal(jax.random.fold_in(KEY, 81), (3, 384)),
+    }
+
+
+@pytest.mark.parametrize("group_tasks", [True, False])
+def test_kernel_path_differential_both_dispatch_modes(group_tasks):
+    """interpret (kernel) vs jnp backends on the full LC state, grouped
+    AND per-task dispatch: prune exact, quantize within tolerance."""
+    params = _quant_prune_params()
+    lc_j = LCAlgorithm(_quant_prune_tasks(), [1e-2],
+                       group_tasks=group_tasks, cstep_backend="jnp")
+    lc_k = LCAlgorithm(_quant_prune_tasks(), [1e-2],
+                       group_tasks=group_tasks, cstep_backend="interpret")
+    st_j = lc_j.c_step(params, lc_j.init(params))
+    st_k = lc_k.c_step(params, lc_k.init(params))
+    for i in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(st_j["tasks"][f"p{i}"]["theta"]["theta"]),
+            np.asarray(st_k["tasks"][f"p{i}"]["theta"]["theta"]))
+        np.testing.assert_allclose(
+            np.asarray(st_j["tasks"][f"q{i}"]["theta"].codebook),
+            np.asarray(st_k["tasks"][f"q{i}"]["theta"].codebook),
+            atol=KMEANS_CB_ATOL)
+    np.testing.assert_array_equal(
+        np.asarray(st_j["tasks"]["st"]["theta"]["theta"]),
+        np.asarray(st_k["tasks"]["st"]["theta"]["theta"]))
+
+
+def test_solve_task_routes_stacked_view_through_solver():
+    """Per-task kernel dispatch flattens a stacked view into the item
+    stack the batched solver expects."""
+    x = jax.random.normal(KEY, (3, 300))
+    task = CompressionTask("st", "^w$", AsStacked("vector"),
+                           ConstraintL0Pruning(kappa=10))
+    task.paths = ["w"]
+    theta = task.scheme_init(x)
+    out_k = solve_task(task, x, theta, mu=None, backend="interpret")
+    out_v = solve_task(task, x, theta, mu=None, backend=None)
+    np.testing.assert_array_equal(np.asarray(out_k["theta"] != 0),
+                                  np.asarray(out_v["theta"] != 0))
+    assert out_k["theta"].shape == (3, 300)
+
+
+def test_subclass_compress_override_falls_back_to_vmap():
+    """A subclass overriding compress() but inheriting compress_batched
+    must NOT be kernel-dispatched (it would run the parent's math)."""
+    calls = []
+
+    class TracedPrune(ConstraintL0Pruning):
+        def compress(self, w, theta, mu=None):
+            calls.append(1)
+            return super().compress(w, theta, mu=mu)
+
+    assert not TracedPrune(kappa=4).kernel_dispatch_ready()
+    assert ConstraintL0Pruning(kappa=4).kernel_dispatch_ready()
+
+    params = {"a": jax.random.normal(KEY, (128,)),
+              "b": jax.random.normal(jax.random.fold_in(KEY, 1), (128,))}
+    tasks = [CompressionTask("a", "^a$", AsVector(), TracedPrune(kappa=4)),
+             CompressionTask("b", "^b$", AsVector(), TracedPrune(kappa=4))]
+    lc = LCAlgorithm(tasks, [1e-2], cstep_backend="interpret")
+    calls.clear()
+    jax.block_until_ready(lc.c_step(params, lc.init(params)))
+    assert calls  # compress() was traced — the vmap path ran
+
+
+def test_unregistered_solver_keeps_per_value_grouping():
+    """A scheme naming a solver that isn't in the registry must NOT
+    switch to batch_key grouping: the vmap fallback would solve a
+    mixed-κ group with group[0]'s κ. It falls back to the legacy
+    per-value groups with correct per-task numerics instead."""
+
+    class TypoPrune(ConstraintL0Pruning):
+        solver = "my_topk_not_registered"
+
+    params = {"a": jax.random.normal(KEY, (256,)),
+              "b": jax.random.normal(jax.random.fold_in(KEY, 1), (256,))}
+    tasks = [CompressionTask("a", "^a$", AsVector(), TypoPrune(kappa=4)),
+             CompressionTask("b", "^b$", AsVector(), TypoPrune(kappa=8))]
+    lc = LCAlgorithm(tasks, [1e-2], cstep_backend="jnp")
+    summary = lc.group_summary(params)
+    assert len(summary) == 2           # κ stays in the grouping identity
+    assert all(g["solver"] is None for g in summary)
+    st = lc.c_step(params, lc.init(params))
+    assert int((st["tasks"]["a"]["theta"]["theta"] != 0).sum()) == 4
+    assert int((st["tasks"]["b"]["theta"]["theta"] != 0).sum()) == 8
+
+
+def test_trainer_config_does_not_clobber_explicit_algorithm_backend():
+    """TrainerConfig.cstep_backend=None (default) inherits the
+    algorithm's backend; an explicit trainer value overrides it."""
+    from repro.configs import get_config, reduced_config
+    from repro.data import TokenStream
+    from repro.runtime import LCTrainer, TrainerConfig
+
+    cfg = reduced_config(get_config("phi3-mini-3.8b")).with_(
+        pattern_reps=1)
+
+    def make(tcfg):
+        lc = LCAlgorithm(
+            [CompressionTask("qg", r"stages/.*/w_gate$", AsVector(),
+                             AdaptiveQuantization(k=2, iters=3))],
+            [1e-3], cstep_backend="interpret")
+        LCTrainer(cfg, lc, TokenStream(cfg.vocab_size, 2, 8), tcfg=tcfg)
+        return lc
+
+    assert TrainerConfig().cstep_backend is None
+    assert make(TrainerConfig()).cstep_backend == "interpret"
+    assert make(TrainerConfig(cstep_backend="jnp")).cstep_backend == "jnp"
+
+
+def test_build_groups_backend_none_keeps_legacy_signatures():
+    params = {"a": jax.random.normal(KEY, (128,)),
+              "b": jax.random.normal(KEY, (128,))}
+    tasks = [CompressionTask("a", "^a$", AsVector(),
+                             ConstraintL0Pruning(kappa=16)),
+             CompressionTask("b", "^b$", AsVector(),
+                             ConstraintL0Pruning(kappa=32))]
+    for t in tasks:
+        t.paths = [t.name]
+    assert len(build_groups(tasks, params)) == 2
+    assert len(build_groups(tasks, params, backend="jnp")) == 1
+
+
+# ----------------------------------------------------------------------
+# grouped Θ^DC init
+# ----------------------------------------------------------------------
+def test_grouped_init_bitwise_matches_legacy_loop():
+    params = _quant_prune_params()
+    lc_g = LCAlgorithm(_quant_prune_tasks(), [1e-2], group_tasks=True)
+    lc_p = LCAlgorithm(_quant_prune_tasks(), [1e-2], group_tasks=False)
+    sg, sp = lc_g.init(params), lc_p.init(params)
+    flat_g = jax.tree_util.tree_leaves_with_path(sg)
+    flat_p = jax.tree_util.tree_leaves_with_path(sp)
+    assert len(flat_g) == len(flat_p)
+    for (kg, vg), (kp, vp) in zip(flat_g, flat_p):
+        assert kg == kp
+        np.testing.assert_array_equal(np.asarray(vg), np.asarray(vp),
+                                      err_msg=jax.tree_util.keystr(kg))
+
+
+def test_grouped_init_splits_init_only_hyperparams():
+    """use_dp_init/dp_bins change init() but not compress(): the C step
+    may group across them, grouped init must NOT (or group[0]'s warm
+    start would silently apply to every member)."""
+    params = {"a": jax.random.normal(KEY, (2048,)),
+              "b": jax.random.normal(jax.random.fold_in(KEY, 1), (2048,))}
+
+    def tasks():
+        return [CompressionTask("a", "^a$", AsVector(),
+                                AdaptiveQuantization(k=4, iters=5,
+                                                     use_dp_init=True)),
+                CompressionTask("b", "^b$", AsVector(),
+                                AdaptiveQuantization(k=4, iters=5))]
+
+    lc_g = LCAlgorithm(tasks(), [1e-2], group_tasks=True)
+    lc_p = LCAlgorithm(tasks(), [1e-2], group_tasks=False)
+    # C-step grouping still merges them (same compress program)...
+    (g,) = lc_g.group_summary(params)
+    assert set(g["tasks"]) == {"a", "b"}
+    # ...but Θ^DC must match the per-task loop bit for bit
+    sg, sp = lc_g.init(params), lc_p.init(params)
+    for name in ("a", "b"):
+        np.testing.assert_array_equal(
+            np.asarray(sg["tasks"][name]["theta"].codebook),
+            np.asarray(sp["tasks"][name]["theta"].codebook),
+            err_msg=name)
+
+
+def test_kernels_package_does_not_shadow_subpackages():
+    """`repro.kernels.kmeans` must stay the subpackage, not a re-exported
+    function (attribute-style module access would break)."""
+    import importlib
+    import types
+
+    import repro.kernels as pk
+    importlib.import_module("repro.kernels.kmeans.ops")
+    assert isinstance(pk.kmeans, types.ModuleType)
+    assert isinstance(pk.prune, types.ModuleType)
+    assert pk.kmeans.ops.kmeans_batched is not None
+
+
+def test_grouped_init_is_one_jitted_call():
+    """Cold start compiles one program (O(groups) traces inside it),
+    not one eager op stream per task."""
+    params = _quant_prune_params()
+    lc = LCAlgorithm(_quant_prune_tasks(), [1e-2])
+    lc.resolve(params)
+    lowered = jax.jit(lc._init_grouped_impl).lower(params)
+    assert lowered.compile() is not None
+
+
+# ----------------------------------------------------------------------
+# sharded path composes with kernel dispatch (1-device mesh on CPU;
+# multi-device bit-identity lives in test_sharded_cstep subprocesses)
+# ----------------------------------------------------------------------
+def test_dispatch_under_mesh_matches_no_mesh():
+    from repro.launch.mesh import make_cstep_mesh
+    params, tasks = _mixed_kappa_setup()
+    lc0 = LCAlgorithm(tasks(), [1e-2], cstep_backend="jnp")
+    lcm = LCAlgorithm(tasks(), [1e-2], cstep_backend="jnp",
+                      mesh=make_cstep_mesh())
+    s0 = lc0.c_step(params, lc0.init(params))
+    sm = lcm.c_step(params, lcm.init(params))
+    for (k0, v0), (km, vm) in zip(
+            jax.tree_util.tree_leaves_with_path(s0),
+            jax.tree_util.tree_leaves_with_path(sm)):
+        assert k0 == km
+        np.testing.assert_array_equal(np.asarray(v0), np.asarray(vm),
+                                      err_msg=jax.tree_util.keystr(k0))
+
+
+# ----------------------------------------------------------------------
+# TPU-only: compiled kernels (the interpret differentials above pin the
+# math; this pins the mosaic compilation)
+# ----------------------------------------------------------------------
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="compiled Pallas kernels need a TPU")
+def test_compiled_pallas_backend_matches_interpret():
+    w = jax.random.normal(KEY, (4, 4096))
+    kappa = jnp.array([8, 64, 512, 2048], jnp.int32)
+    mi = pops.topk_mask_batched(w, kappa, impl="interpret")
+    mp = pops.topk_mask_batched(w, kappa, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(mi), np.asarray(mp))
+    cb0 = jnp.sort(jax.random.normal(KEY, (4, 8)), axis=-1)
+    ci, _ = kops.kmeans_batched(w, cb0, iters=10, impl="interpret")
+    cp, _ = kops.kmeans_batched(w, cb0, iters=10, impl="pallas")
+    np.testing.assert_allclose(np.asarray(ci), np.asarray(cp),
+                               atol=KMEANS_CB_ATOL)
+
+
+# ----------------------------------------------------------------------
+# data prefetcher (the C step overlaps data loading too)
+# ----------------------------------------------------------------------
+def test_prefetcher_matches_direct_batches():
+    data = TokenStream(vocab_size=64, batch=2, seq_len=8)
+    pf = Prefetcher(data)
+    pf.prefetch(3)
+    direct = data.batch_at(3)
+    fetched = pf.batch_at(3)
+    np.testing.assert_array_equal(np.asarray(fetched["inputs"]),
+                                  np.asarray(direct["inputs"]))
+    # miss path computes directly; repeat fetch of a consumed step too
+    np.testing.assert_array_equal(np.asarray(pf.batch_at(5)["inputs"]),
+                                  np.asarray(data.batch_at(5)["inputs"]))
+    np.testing.assert_array_equal(np.asarray(pf.batch_at(3)["inputs"]),
+                                  np.asarray(direct["inputs"]))
+
+
+def test_prefetcher_wraps_callable_sources_and_caps_slots():
+    calls = []
+
+    def source(step):
+        calls.append(step)
+        return {"step": step}
+
+    pf = Prefetcher(source)
+    for s in range(8):
+        pf.prefetch(s)
+    pf.prefetch(3)  # idempotent per step — no duplicate fetch
+    assert pf.batch_at(7)["step"] == 7
+    assert len(pf._pending) <= Prefetcher.MAX_SLOTS
+    assert calls.count(3) <= 2  # dropped slot may refetch, never dupes
