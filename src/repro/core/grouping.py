@@ -35,13 +35,24 @@ count so they land where the L step consumes them. ``mesh=None``
 
 Kernel dispatch (``backend=``) composes with all of it: under the
 batched signature, schemes that move a hyperparameter into a per-item
-operand (ℓ0 pruning's κ) group across values of it — one launch for
-mixed-κ tasks — and the per-item operands are padded/sharded alongside
-the items. Tasks whose scheme opts out (``group_key() is None``) fall
-through to the per-task path unchanged, so exotic schemes need no vmap
-support; a scheme whose subclass overrides ``compress`` without
-standing behind ``compress_batched`` is likewise kept on the vmap path
-(see ``CompressionScheme.kernel_dispatch_ready``).
+operand (ℓ0 pruning's κ, low-rank's target rank, rank selection's α,
+k-means' valid-K count) group across values of it — one launch for
+mixed-hyperparameter tasks — and the per-item operands are
+padded/sharded alongside the items. Θ leaves whose *shapes* differ
+across members (mixed-rank factors, mixed-K codebooks) pack with
+trailing-dim padding (``pack_thetas_padded``) and slice back to each
+task's own shapes after the solve. Stochastic solvers
+(``scheme.wants_key``) get engine-derived per-item PRNG keys — by task
+name and within-task index, identical on the grouped and per-task
+paths — appended as the last operand (kernel path) or threaded as a
+``key=`` kwarg (vmap path). Batched solvers that are custom-call-free
+(``scheme.gspmd_safe``: the matmul-only low-rank solvers) shard under
+plain GSPMD instead of the shard_map workaround. Tasks whose scheme
+opts out (``group_key() is None``) fall through to the per-task path
+unchanged, so exotic schemes need no vmap support; a scheme whose
+subclass overrides ``compress`` without standing behind
+``compress_batched`` is likewise kept on the vmap path (see
+``CompressionScheme.kernel_dispatch_ready``).
 """
 from __future__ import annotations
 
@@ -52,7 +63,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.schemes.base import (
-    add_leading_axis, drop_leading_axis, pack_thetas, unpack_thetas)
+    add_leading_axis, drop_leading_axis, pack_thetas, pack_thetas_padded,
+    slice_theta_like, unpack_thetas)
 from repro.core.tasks import CompressionTask
 from repro.distributed.sharding import (
     items_partition, shard_map, stacked_sharding)
@@ -136,6 +148,13 @@ def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
             entry, pad = items_partition(n_items, mesh, rules)
             spec = P(entry) if entry is not None else None
         solver_fn, actual = _task_solver(t0.scheme, backend)
+        shard_mode = None
+        if spec is not None:
+            # matmul-only solvers (scheme.gspmd_safe) shard under plain
+            # GSPMD; everything else keeps the shard_map custom-call
+            # workaround (docs/architecture.md)
+            shard_mode = ("gspmd" if solver_fn is not None
+                          and t0.scheme.gspmd_safe else "shard_map")
         out.append({
             "scheme": t0.scheme.name,
             "item_shape": t0.view.item_shape(xs[t0.name]),
@@ -145,6 +164,7 @@ def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
             "grouped": grouped,
             "spec": spec,
             "padding": pad,
+            "shard_mode": shard_mode,
             "solver": t0.scheme.solver if solver_fn is not None else None,
             "backend": actual,
         })
@@ -172,7 +192,8 @@ def _constrain_replicated(tree, mesh):
 
 
 def _run_group_solve(solve, arrays: tuple, n_items: int,
-                     mesh: Mesh | None, rules: dict | None):
+                     mesh: Mesh | None, rules: dict | None,
+                     gspmd: bool = False):
     """Run a packed-group solve, optionally sharded over the mesh.
 
     ``arrays`` are pytrees whose every leaf carries the packed item
@@ -181,6 +202,13 @@ def _run_group_solve(solve, arrays: tuple, n_items: int,
     → shard_map → slice dance from the module docstring; ``mesh=None``
     calls ``solve`` directly. Returns ``(theta_packed, a_packed)`` with
     the padding already sliced off.
+
+    ``gspmd=True`` (matmul-only batched solvers — ``scheme.gspmd_safe``)
+    bypasses the shard_map workaround: the packed item axis is annotated
+    with plain sharding constraints and GSPMD partitions the solve
+    itself. Correct only when every op in ``solve`` has an SPMD rule
+    (no LAPACK custom calls); padded lanes are still independent items
+    computed and discarded.
     """
     entry, pad = (None, 0)
     if mesh is not None:
@@ -193,20 +221,30 @@ def _run_group_solve(solve, arrays: tuple, n_items: int,
             arrays = tuple(
                 jax.tree_util.tree_map(lambda x: _pad_leading(x, pad), a)
                 for a in arrays)
-        # enter the shard_map boundary from an explicit replicated
-        # layout: on jax 0.4.x GSPMD's reshard-into-manual from a
-        # dim-sharded concatenate miscompiles (the output comes back
-        # psummed over the unmentioned mesh axes), while
-        # replicated → manual slices correctly.
-        arrays = tuple(_constrain_replicated(a, mesh) for a in arrays)
-        # shard_map, not bare GSPMD: each device solves its local items,
-        # so schemes built on custom calls (LAPACK svd/qr) partition
-        # correctly — the SPMD partitioner has no rule for those and
-        # miscompiles sliced uses.
-        spec = P(entry)
-        theta_packed, a_packed = shard_map(
-            solve, mesh, in_specs=(spec,) * len(arrays),
-            out_specs=(spec, spec))(*arrays)
+        if gspmd:
+            # plain GSPMD: constrain the packed item axis sharded on the
+            # way in and out and let the partitioner split the batched
+            # matmuls — no manual region, no custom-call workaround
+            arrays = tuple(_constrain_leading(a, mesh, entry)
+                           for a in arrays)
+            theta_packed, a_packed = solve(*arrays)
+            theta_packed = _constrain_leading(theta_packed, mesh, entry)
+            a_packed = _constrain_leading(a_packed, mesh, entry)
+        else:
+            # enter the shard_map boundary from an explicit replicated
+            # layout: on jax 0.4.x GSPMD's reshard-into-manual from a
+            # dim-sharded concatenate miscompiles (the output comes back
+            # psummed over the unmentioned mesh axes), while
+            # replicated → manual slices correctly.
+            arrays = tuple(_constrain_replicated(a, mesh) for a in arrays)
+            # shard_map, not bare GSPMD: each device solves its local
+            # items, so schemes built on custom calls (LAPACK svd/qr)
+            # partition correctly — the SPMD partitioner has no rule for
+            # those and miscompiles sliced uses.
+            spec = P(entry)
+            theta_packed, a_packed = shard_map(
+                solve, mesh, in_specs=(spec,) * len(arrays),
+                out_specs=(spec, spec))(*arrays)
     else:
         theta_packed, a_packed = solve(*arrays)
 
@@ -217,12 +255,28 @@ def _run_group_solve(solve, arrays: tuple, n_items: int,
     return theta_packed, a_packed
 
 
+def _packed_keys(group: Sequence[CompressionTask], counts: list[int]):
+    """One (Σ items, 2) uint32 key array for a ``wants_key`` group.
+
+    The single source of key packing for every grouped path (solver
+    operands, vmap fallback, grouped init) — ``CompressionTask
+    .item_keys`` derives each slice from task name + within-task index,
+    so all paths see identical per-item keys."""
+    return jnp.concatenate([t.item_keys(n) for t, n in zip(group, counts)],
+                           axis=0)
+
+
 def _group_operands(group: Sequence[CompressionTask], counts: list[int]):
     """Concatenate each task's per-item solver operands into the packed
-    form ``compress_batched`` consumes (mixed-κ: one (Σ items,) array)."""
+    form ``compress_batched`` consumes (mixed-κ: one (Σ items,) array).
+    Schemes with ``wants_key`` get their packed per-item PRNG keys
+    appended as the LAST operand."""
     per_task = [t.scheme.batch_operands(n) for t, n in zip(group, counts)]
-    return tuple(jnp.concatenate(parts, axis=0)
-                 for parts in zip(*per_task))
+    operands = tuple(jnp.concatenate(parts, axis=0)
+                     for parts in zip(*per_task))
+    if group[0].scheme.wants_key:
+        operands = operands + (_packed_keys(group, counts),)
+    return operands
 
 
 def solve_task(task: CompressionTask, x, theta, mu,
@@ -240,7 +294,10 @@ def solve_task(task: CompressionTask, x, theta, mu,
         return task.scheme_compress(x, theta, mu)
     items = task.view.to_items(x)
     ti = theta if task.view.stacked else add_leading_axis(theta)
-    operands = task.scheme.batch_operands(task.view.item_count(x))
+    n_items = task.view.item_count(x)
+    operands = task.scheme.batch_operands(n_items)
+    if task.scheme.wants_key:
+        operands = operands + (task.item_keys(n_items),)
     nt = task.scheme.compress_batched(solver_fn, items, ti, operands,
                                       mu=mu)
     return nt if task.view.stacked else drop_leading_axis(nt)
@@ -277,29 +334,50 @@ def grouped_compress(tasks: Sequence[CompressionTask], xs: dict,
         # packed per-item arrays, never through group[0]'s attributes
         scheme = group[0].scheme
         solver_fn, _ = _task_solver(scheme, backend)
-        items = jnp.concatenate(
-            [t.view.to_items(xs[t.name]) for t in group], axis=0)
-        packed = pack_thetas([
-            thetas[t.name] if t.view.stacked
-            else add_leading_axis(thetas[t.name]) for t in group])
         counts = [t.view.item_count(xs[t.name]) for t in group]
         n_items = sum(counts)
-        operands = (_group_operands(group, counts)
-                    if solver_fn is not None else ())
+        items = jnp.concatenate(
+            [t.view.to_items(xs[t.name]) for t in group], axis=0)
+        thetas_lead = [thetas[t.name] if t.view.stacked
+                       else add_leading_axis(thetas[t.name])
+                       for t in group]
+        if solver_fn is not None:
+            # batched solvers take Θ leaves padded to the group max
+            # trailing shape (mixed-rank factors → R_max, mixed-K
+            # codebooks → K_max); the vmap path never mixes shapes
+            # (they are part of its grouping identity)
+            packed = pack_thetas_padded(thetas_lead)
+            operands = _group_operands(group, counts)
+        else:
+            packed = pack_thetas(thetas_lead)
+            operands = ((_packed_keys(group, counts),)
+                        if scheme.wants_key else ())
 
         def _solve(xi, ti, *ops, scheme=scheme, solver_fn=solver_fn):
             if solver_fn is not None:
                 nt = scheme.compress_batched(solver_fn, xi, ti, ops,
                                              mu=mu)
+            elif scheme.wants_key:
+                (keys,) = ops
+                nt = jax.vmap(
+                    lambda x, th, k: scheme.compress(x, th, mu=mu,
+                                                     key=k))(xi, ti, keys)
             else:
                 nt = jax.vmap(
                     lambda x, th: scheme.compress(x, th, mu=mu))(xi, ti)
             return nt, jax.vmap(scheme.decompress)(nt)
 
         new_packed, a_packed = _run_group_solve(
-            _solve, (items, packed) + operands, n_items, mesh, rules)
+            _solve, (items, packed) + operands, n_items, mesh, rules,
+            gspmd=solver_fn is not None and scheme.gspmd_safe)
 
         theta_parts = unpack_thetas(new_packed, counts)
+        if solver_fn is not None:
+            # trailing-dim padding back off: every task's Θ lands in
+            # its own LC-state shapes (live entries lead — see
+            # pack_thetas_padded)
+            theta_parts = [slice_theta_like(th, old) for th, old
+                           in zip(theta_parts, thetas_lead)]
         off = 0
         for t, th, n in zip(group, theta_parts, counts):
             a_arr = t.view.from_items(a_packed[off:off + n])
@@ -348,12 +426,23 @@ def grouped_init(tasks: Sequence[CompressionTask], xs: dict,
         counts = [t.view.item_count(xs[t.name]) for t in group]
         n_items = sum(counts)
 
-        def _solve(xi, scheme=scheme):
-            th = jax.vmap(lambda x: scheme.init(x))(xi)
-            return th, jax.vmap(scheme.decompress)(th)
+        if scheme.wants_key:
+            keys = _packed_keys(group, counts)
+
+            def _solve(xi, ki, scheme=scheme):
+                th = jax.vmap(lambda x, k: scheme.init(x, key=k))(xi, ki)
+                return th, jax.vmap(scheme.decompress)(th)
+
+            arrays = (items, keys)
+        else:
+            def _solve(xi, scheme=scheme):
+                th = jax.vmap(lambda x: scheme.init(x))(xi)
+                return th, jax.vmap(scheme.decompress)(th)
+
+            arrays = (items,)
 
         theta_packed, a_packed = _run_group_solve(
-            _solve, (items,), n_items, mesh, rules)
+            _solve, arrays, n_items, mesh, rules)
 
         theta_parts = unpack_thetas(theta_packed, counts)
         off = 0

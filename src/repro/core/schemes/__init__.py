@@ -1,6 +1,6 @@
 from repro.core.schemes.base import (
     CompressionScheme, add_leading_axis, drop_leading_axis, pack_thetas,
-    unpack_thetas)
+    pack_thetas_padded, slice_theta_like, unpack_thetas)
 from repro.core.schemes.quantize import (
     AdaptiveQuantization, Binarize, Ternarize, kmeans_1d, quantile_init,
     optimal_codebook_dp)
@@ -13,7 +13,8 @@ from repro.core.schemes.additive import AdditiveCombination
 
 __all__ = [
     "CompressionScheme", "add_leading_axis", "drop_leading_axis",
-    "pack_thetas", "unpack_thetas",
+    "pack_thetas", "pack_thetas_padded", "slice_theta_like",
+    "unpack_thetas",
     "AdaptiveQuantization", "Binarize", "Ternarize",
     "kmeans_1d", "quantile_init", "optimal_codebook_dp",
     "ConstraintL0Pruning", "ConstraintL1Pruning", "PenaltyL0Pruning",

@@ -38,6 +38,26 @@ class CompressionScheme:
     #: every item of a packed stack.
     solver: str | None = None
 
+    #: whether the C-step engine threads a *per-item PRNG key* into the
+    #: scheme's solves (stochastic C steps: randomized-SVD sketches).
+    #: When True, :meth:`compress` and :meth:`init` must accept a
+    #: ``key=`` kwarg, and the grouped engine appends a packed
+    #: ``(n_items, 2)`` uint32 key array as the LAST entry of the
+    #: ``operands`` tuple handed to :meth:`compress_batched`. Keys are
+    #: derived per (task name, within-task item index) —
+    #: ``CompressionTask.item_keys`` — so they are identical on the
+    #: grouped and per-task dispatch paths, stable across reruns, and
+    #: never shared between packed items.
+    wants_key: bool = False
+
+    #: whether this scheme's *batched solver* lowers to ops with SPMD
+    #: partitioning rules only (matmuls/elementwise — no LAPACK custom
+    #: call). Under a mesh, such a group's packed item axis shards with
+    #: plain GSPMD constraints instead of the shard_map custom-call
+    #: workaround (docs/architecture.md). Only consulted on the kernel
+    #: dispatch path; the vmap fallback always keeps the workaround.
+    gspmd_safe: bool = False
+
     def init(self, w: jnp.ndarray, key=None) -> Theta:
         """Direct compression Θ^DC = Π(w) used to initialize the LC loop."""
         raise NotImplementedError
@@ -130,8 +150,13 @@ class CompressionScheme:
         the active backend; ``w`` is ``(n_items, *item_shape)``;
         ``theta`` carries the same leading axis; ``operands`` is the
         group-concatenated result of :meth:`batch_operands`. Must be
-        numerically equivalent to vmapping :meth:`compress` (bit-equal
-        on the jnp backend; documented tolerance on kernel backends).
+        numerically equivalent to vmapping :meth:`compress` — bit-equal
+        on the jnp backend, documented tolerance on kernel backends —
+        unless the scheme documents a deliberate algorithm switch and
+        an opt-out (``LowRank``'s batched solver is the randomized SVD
+        at a stated 1e-4 relative-distortion budget;
+        ``randomized=False`` keeps the exact path and disables
+        dispatch).
         """
         raise NotImplementedError
 
@@ -194,6 +219,45 @@ def pack_thetas(thetas: list[Theta]) -> Theta:
     axis 0 — the stacked Θ a grouped vmapped C step consumes."""
     return jax.tree_util.tree_map(
         lambda *xs: jnp.concatenate(xs, axis=0), *thetas)
+
+
+def pack_thetas_padded(thetas: list[Theta]) -> Theta:
+    """:func:`pack_thetas` with *trailing-dim padding*: each leaf is
+    zero-padded up to the per-leaf max trailing shape before the
+    leading-axis concatenate.
+
+    This is what lets tasks whose Θ leaves differ in a trailing dim —
+    ``LowRank`` factors of different target ranks (``(m, r_i)`` →
+    ``(m, R_max)``), mixed-K codebooks (``(K_i,)`` → ``(K_max,)``) —
+    pack into ONE batched solver launch. The solver contract is that
+    each item's live entries stay in the leading slots of the padded
+    dim (masked factor columns / +inf codebook tails), so the grouped
+    engine can slice every task's Θ back to its own shapes afterwards.
+    A group with uniform trailing shapes pads nothing and is exactly
+    :func:`pack_thetas`.
+    """
+    def cat(*xs):
+        trail = tuple(max(x.shape[1 + d] for x in xs)
+                      for d in range(xs[0].ndim - 1))
+
+        def pad(x):
+            pads = [(0, 0)] + [(0, t - s)
+                               for s, t in zip(x.shape[1:], trail)]
+            return jnp.pad(x, pads) if any(p for _, p in pads) else x
+
+        return jnp.concatenate([pad(x) for x in xs], axis=0)
+
+    return jax.tree_util.tree_map(cat, *thetas)
+
+
+def slice_theta_like(theta: Theta, like: Theta) -> Theta:
+    """Undo :func:`pack_thetas_padded`'s trailing-dim padding for one
+    task: slice every leaf of ``theta`` down to ``like``'s trailing
+    shape (leading item axis untouched)."""
+    return jax.tree_util.tree_map(
+        lambda new, old: new[(slice(None),)
+                             + tuple(slice(0, s) for s in old.shape[1:])],
+        theta, like)
 
 
 def unpack_thetas(packed: Theta, counts: list[int]) -> list[Theta]:

@@ -9,8 +9,22 @@ Because the selected rank changes across C steps, Θ keeps fixed shapes
 (U: (m,R), V: (n,R)) plus an integer rank; columns ≥ r are masked to zero —
 this keeps every C step jit-compatible on TPU.
 
-For large matrices a randomized range finder (Halko et al.) replaces the
-exact SVD: the only O(m·n·R) work is two tall matmuls, which GSPMD shards.
+Under kernel dispatch both schemes route through the **matmul-only
+batched solvers** in ``kernels/lowrank`` (``lowrank_rsvd`` /
+``rank_select``): Gaussian sketch per item, power iteration with
+Jacobi-based orthogonalization, small Gram finisher — no LAPACK custom
+call, so packed groups shard under plain GSPMD (``gspmd_safe``) and
+mixed-rank / mixed-α tasks pack into ONE launch (rank and α ride as
+traced per-item operands; factors pad to the group ``R_max``).
+``LowRank(randomized=False)`` demands the exact LAPACK SVD and opts out
+of dispatch; ``RankSelection`` joins the batched path only when
+``max_rank`` bounds the sketch (unbounded selection keeps the exact
+spectrum).
+
+For large matrices the legacy per-task path also uses a randomized range
+finder (Halko et al.); its sketch key is threaded per item by the C-step
+engine (``wants_key`` / ``CompressionTask.item_keys``), so grouped items
+never share a sketch and reruns are reproducible.
 """
 from __future__ import annotations
 
@@ -44,10 +58,23 @@ def exact_svd(w: jnp.ndarray):
     return u, s, vt.T
 
 
+#: base seed for sketch keys when a scheme is used outside the C-step
+#: engine (direct compress() calls); inside it, per-item fold_in keys
+#: arrive via the key= kwarg / the engine-appended operand.
+_SKETCH_SEED = 0x1C
+
+
 class LowRank(CompressionScheme):
     """W ≈ U Vᵀ with fixed target rank (Θ = (U√s, V√s))."""
 
     domain = "matrix"
+    # batched matmul-only randomized SVD in the dispatch registry; rank
+    # is NOT in batch_key() — it rides as a traced per-item operand, so
+    # tasks differing only in target rank pack into ONE group/launch
+    # with factors padded to the group R_max (pack_thetas_padded).
+    solver = "lowrank_rsvd"
+    wants_key = True       # per-item sketch keys from the C-step engine
+    gspmd_safe = True      # no LAPACK custom call in the batched solver
 
     def __init__(self, target_rank: int, randomized: str = "auto"):
         assert target_rank >= 1
@@ -59,23 +86,53 @@ class LowRank(CompressionScheme):
         # share a shape, so the key stays static within any group.
         return ("lowrank", self.rank, self.randomized)
 
+    def batch_key(self):
+        # randomized=False is an explicit demand for the exact LAPACK
+        # SVD: opt out of the (always-randomized) batched solver.
+        if self.randomized is False:
+            return None
+        return ("lowrank-rsvd",)
+
+    def batch_operands(self, n_items: int):
+        return (jnp.full((n_items,), self.rank, jnp.int32),)
+
+    def compress_batched(self, solve, w, theta, operands, mu=None):
+        """One solver call factorizes the whole packed group. ``theta``
+        arrives padded to the group R_max (its trailing dim is the
+        static factor width the solver needs); ``operands`` is
+        (per-item ranks, per-item sketch keys)."""
+        rank, keys = operands
+        r_max = theta["u"].shape[-1]
+        u, v = solve(w, rank, keys, r_max=r_max)
+        return {"u": u, "v": v}
+
     def _use_rsvd(self, shape):
+        # legacy-path policy only: with kernel dispatch OFF, "auto"
+        # keeps the exact SVD below the 2048 threshold. Under dispatch,
+        # "auto" means the batched randomized solver regardless of
+        # shape (the documented ≤1e-4 relative-distortion budget) —
+        # pass randomized=False to demand exactness everywhere.
         if self.randomized == "auto":
             return min(shape) > 2048
         return bool(self.randomized)
 
-    def _svd(self, w):
+    def _svd(self, w, key=None):
         if self._use_rsvd(w.shape):
-            key = jax.random.PRNGKey(w.shape[0] * 7919 + w.shape[1])
+            if key is None:
+                # direct scheme use outside the C-step engine: a fixed
+                # deterministic seed (never the old shape-derived one —
+                # equal-shaped matrices must not be forced to share a
+                # sketch when the engine supplies real per-item keys)
+                key = jax.random.PRNGKey(_SKETCH_SEED)
             return randomized_svd(w, self.rank, key)
         u, s, v = exact_svd(w)
         return u[:, :self.rank], s[:self.rank], v[:, :self.rank]
 
     def init(self, w, key=None):
-        return self.compress(w, None)
+        return self.compress(w, None, key=key)
 
-    def compress(self, w, theta, mu=None):
-        u, s, v = self._svd(w)
+    def compress(self, w, theta, mu=None, key=None):
+        u, s, v = self._svd(w, key)
         rs = jnp.sqrt(s)
         return {"u": u * rs[None, :], "v": v * rs[None, :]}
 
@@ -98,6 +155,12 @@ class RankSelection(CompressionScheme):
     """
 
     domain = "matrix"
+    # batched matmul-only spectrum solver; α rides as a traced per-item
+    # operand so tasks differing only in α pack into ONE group/launch.
+    # Engages only when max_rank bounds the sketch (see batch_key).
+    solver = "rank_select"
+    wants_key = True
+    gspmd_safe = True
 
     def __init__(self, alpha: float, cost: str = "storage",
                  max_rank: int | None = None):
@@ -108,6 +171,25 @@ class RankSelection(CompressionScheme):
 
     def group_key(self):
         return ("rank-selection", self.alpha, self.cost, self.max_rank)
+
+    def batch_key(self):
+        # unbounded selection (max_rank=None) needs the full spectrum —
+        # keep the exact LAPACK path; a bounded max_rank gives the
+        # batched solver its static sketch width. α drops out (operand).
+        if self.max_rank is None:
+            return None
+        return ("rank-select", self.cost, self.max_rank)
+
+    def batch_operands(self, n_items: int):
+        return (jnp.full((n_items,), self.alpha, jnp.float32),)
+
+    def compress_batched(self, solve, w, theta, operands, mu=None):
+        assert mu is not None, "rank selection needs μ"
+        alpha, keys = operands
+        r_max = theta["u"].shape[-1]
+        u, v, rank = solve(w, alpha, keys, mu, r_max=r_max,
+                           cost=self.cost)
+        return {"u": u, "v": v, "rank": rank}
 
     def _rmax(self, shape):
         r = min(shape)
@@ -120,9 +202,9 @@ class RankSelection(CompressionScheme):
         return 2.0 * float(m + n)        # MACs per unit rank per example
 
     def init(self, w, key=None):
-        return self.compress(w, None, mu=1e-6)
+        return self.compress(w, None, mu=1e-6, key=key)
 
-    def compress(self, w, theta, mu=None):
+    def compress(self, w, theta, mu=None, key=None):
         assert mu is not None, "rank selection needs μ"
         m, n = w.shape
         rmax = self._rmax((m, n))
@@ -146,17 +228,25 @@ class RankSelection(CompressionScheme):
     def bits(self, theta, float_bits: int = 32):
         """Storage at the *selected* rank: r·(m+n) floats for the live
         columns of U/V, plus ⌈log2(R+1)⌉ bits to store which r ∈ {0..R}
-        was selected (the masked columns are zero and never stored)."""
+        was selected (the masked columns are zero and never stored).
+
+        No ``float()`` host pull on ``theta["rank"]`` — it is a traced
+        device scalar inside jitted reporting paths (and a host numpy
+        scalar in ``compression_ratio``'s per-item loop); plain
+        arithmetic works for both and jit callers get a 0-d array.
+        """
         m = theta["u"].shape[0]
         n = theta["v"].shape[0]
         r_max = theta["u"].shape[1]
         rank_index_bits = math.ceil(math.log2(r_max + 1))
-        return float(theta["rank"]) * (m + n) * float_bits \
+        return theta["rank"] * float((m + n) * float_bits) \
             + rank_index_bits
 
     def rank(self, theta) -> jnp.ndarray:
         return theta["rank"]
 
     def flops(self, theta, orig_shape):
+        """Inference FLOPs at the selected rank — traced-safe like
+        :meth:`bits` (no ``float()`` on the device scalar)."""
         m, n = orig_shape[-2], orig_shape[-1]
-        return 2.0 * float(theta["rank"]) * (m + n)
+        return theta["rank"] * (2.0 * (m + n))

@@ -93,6 +93,10 @@ class ConstraintL1Pruning(CompressionScheme):
     """s.t. ‖θ‖₁ ≤ κ — projection onto the ℓ1 ball."""
 
     domain = "vector"
+    # batched sort+cumsum projection in the dispatch registry (ROADMAP
+    # "Solver coverage"); the ball radius κ rides as a traced per-item
+    # operand, so tasks differing only in κ share one launch.
+    solver = "project_l1_ball"
 
     def __init__(self, kappa: float):
         self.kappa = float(kappa)
@@ -100,11 +104,21 @@ class ConstraintL1Pruning(CompressionScheme):
     def group_key(self):
         return ("prune-l1", self.kappa)
 
+    def batch_key(self):
+        return ("prune-l1",)
+
+    def batch_operands(self, n_items: int):
+        return (jnp.full((n_items,), self.kappa, jnp.float32),)
+
     def init(self, w, key=None):
         return self.compress(w, None)
 
     def compress(self, w, theta, mu=None):
         return {"theta": project_l1_ball(w, self.kappa)}
+
+    def compress_batched(self, solve, w, theta, operands, mu=None):
+        (radius,) = operands
+        return {"theta": solve(w, radius)}
 
     def decompress(self, theta):
         return theta["theta"]
@@ -154,12 +168,21 @@ class PenaltyL1Pruning(CompressionScheme):
     """min L(w) + α‖w‖₁ — C step soft-thresholds at α/μ."""
 
     domain = "vector"
+    # batched prox in the dispatch registry; α rides as a traced
+    # per-item operand, so mixed-α penalty tasks share one launch.
+    solver = "soft_threshold"
 
     def __init__(self, alpha: float):
         self.alpha = float(alpha)
 
     def group_key(self):
         return ("prune-penalty-l1", self.alpha)
+
+    def batch_key(self):
+        return ("prune-penalty-l1",)
+
+    def batch_operands(self, n_items: int):
+        return (jnp.full((n_items,), self.alpha, jnp.float32),)
 
     def init(self, w, key=None):
         return {"theta": w}
@@ -168,6 +191,11 @@ class PenaltyL1Pruning(CompressionScheme):
         assert mu is not None, "penalty pruning needs μ"
         t = self.alpha / mu
         return {"theta": jnp.sign(w) * jnp.maximum(jnp.abs(w) - t, 0.0)}
+
+    def compress_batched(self, solve, w, theta, operands, mu=None):
+        assert mu is not None, "penalty pruning needs μ"
+        (alpha,) = operands
+        return {"theta": solve(w, alpha, mu)}
 
     def decompress(self, theta):
         return theta["theta"]

@@ -117,6 +117,18 @@ class AdaptiveQuantization(CompressionScheme):
     def group_key(self):
         return ("quant-kmeans", self.k, self.iters)
 
+    def batch_key(self):
+        # K shapes the codebook arrays, so it can't be a plain operand
+        # like κ — instead codebooks pad to the group K_max
+        # (pack_thetas_padded) and K rides as the traced per-item
+        # *valid-entry count*: tasks differing only in K pack into one
+        # group and one launch (mixed-K grouping). iters still shapes
+        # the traced Lloyd loop and stays in the key.
+        return ("quant-kmeans", self.iters)
+
+    def batch_operands(self, n_items: int):
+        return (jnp.full((n_items,), self.k, jnp.int32),)
+
     def init_key(self):
         # the DP warm start only changes init(), not compress(): keep it
         # out of group_key (C-step groups merge across it) but in the
@@ -138,8 +150,12 @@ class AdaptiveQuantization(CompressionScheme):
     def compress_batched(self, solve, w, theta: QuantTheta, operands,
                          mu=None):
         """One solver call warm-starts every item's codebook at once
-        (w (I, P), theta.codebook (I, K))."""
-        cb, assign = solve(w, theta.codebook, iters=self.iters)
+        (w (I, P), theta.codebook (I, K_max) padded to the group max,
+        operands = (per-item live-entry counts,)). Padded entries are
+        pinned to +inf inside the solver, so each item's live codebook
+        stays in the leading slots for the per-task slice-back."""
+        (kvalid,) = operands
+        cb, assign = solve(w, theta.codebook, kvalid, iters=self.iters)
         return QuantTheta(cb, assign)
 
     def decompress(self, theta: QuantTheta):

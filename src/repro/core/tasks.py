@@ -9,6 +9,7 @@ scanned layer stacks (a stacked param is one leaf, compressed per-item via
 from __future__ import annotations
 
 import re
+import zlib
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -122,13 +123,41 @@ class CompressionTask:
         return (type(self.scheme).__qualname__, key,
                 self.view.item_shape(x), str(x.dtype))
 
+    # ---- per-item PRNG keys (stochastic C steps) -----------------------
+    def item_keys(self, n_items: int) -> jnp.ndarray:
+        """(n_items, 2) uint32 PRNG keys for schemes with ``wants_key``.
+
+        Derived from the *task name* (not the packed group offset) and
+        the within-task item index, so the keys are identical on the
+        grouped and per-task dispatch paths, deterministic across
+        reruns, and distinct for every item of a packed group — no two
+        items ever share a randomized-SVD sketch.
+        """
+        seed = zlib.crc32(self.name.encode("utf-8")) & 0x7FFFFFFF
+        base = jax.random.PRNGKey(seed)
+        return jax.vmap(lambda j: jax.random.fold_in(base, j))(
+            jnp.arange(n_items))
+
     # ---- scheme application, vmapped when the view is stacked ----------
     def scheme_init(self, x):
+        if self.scheme.wants_key:
+            keys = self.item_keys(self.view.item_count(x))
+            if self.view.stacked:
+                return jax.vmap(
+                    lambda xi, ki: self.scheme.init(xi, key=ki))(x, keys)
+            return self.scheme.init(x, key=keys[0])
         if self.view.stacked:
             return jax.vmap(lambda xi: self.scheme.init(xi))(x)
         return self.scheme.init(x)
 
     def scheme_compress(self, x, theta, mu):
+        if self.scheme.wants_key:
+            keys = self.item_keys(self.view.item_count(x))
+            if self.view.stacked:
+                return jax.vmap(
+                    lambda xi, ti, ki: self.scheme.compress(
+                        xi, ti, mu=mu, key=ki))(x, theta, keys)
+            return self.scheme.compress(x, theta, mu=mu, key=keys[0])
         if self.view.stacked:
             return jax.vmap(
                 lambda xi, ti: self.scheme.compress(xi, ti, mu=mu))(x, theta)

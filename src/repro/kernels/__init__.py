@@ -1,10 +1,13 @@
-"""Pallas TPU kernels for the paper's hot spots: the k-means C step, the
-codebook-dequant serving GEMM, and threshold-bisection pruning. Each
-subpackage ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper with CPU fallback), ref.py (pure-jnp oracle).
+"""Batched C-step kernels for the paper's hot spots: the k-means C
+step, the codebook-dequant serving GEMM, threshold-bisection pruning
+(Pallas TPU kernels), and the matmul-only batched randomized SVD for
+the low-rank C steps (``lowrank`` — pure XLA, no custom calls). Each
+subpackage ships <name>.py (the core kernel/math), ops.py (jit'd
+driver with CPU fallback), ref.py (pure-jnp/LAPACK oracle).
 
 ``dispatch`` is the kernel dispatch layer: schemes name a batched
-solver ("kmeans_lloyd", "topk_mask") and the registry resolves it per
+solver ("kmeans_lloyd", "topk_mask", "lowrank_rsvd", "rank_select",
+"project_l1_ball", "soft_threshold") and the registry resolves it per
 backend (compiled Pallas on TPU, interpret-mode Pallas or batched jnp
 on CPU) for the grouped C step.
 """

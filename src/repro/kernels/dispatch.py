@@ -31,11 +31,34 @@ engine, or the trainer) noticing. This registry is that seam:
 Solver calling conventions (all arrays carry the packed leading item
 axis ``I``):
 
-* ``kmeans_lloyd(w (I,P) f32, codebooks0 (I,K) f32, *, iters) ->
-  (codebooks (I,K) f32, assign (I,P) i32)``
+* ``kmeans_lloyd(w (I,P) f32, codebooks0 (I,K_max) f32,
+  kvalid (I,) i32, *, iters) -> (codebooks (I,K_max) f32,
+  assign (I,P) i32)`` — codebooks are padded to the group-wide
+  ``K_max``; ``kvalid`` is the traced per-item live-entry count, so
+  tasks differing only in K share one launch (mixed-K grouping).
 * ``topk_mask(w (I,P) f32, kappa (I,) i32) -> theta (I,P) f32`` —
   κ is a *traced per-item operand*, which is what lets tasks that
   differ only in κ share one kernel launch (mixed-κ grouping).
+* ``project_l1_ball(w (I,P) f32, radius (I,) f32) -> theta (I,P)
+  f32`` — per-item ℓ1-ball projection, one sort+cumsum over the item
+  axis (mixed-radius grouping).
+* ``soft_threshold(w (I,P) f32, alpha (I,) f32, mu) -> theta (I,P)
+  f32`` — the ℓ1-penalty prox at α_i/μ (mixed-α grouping).
+* ``lowrank_rsvd(w (I,m,n) f32, rank (I,) i32, keys (I,2) u32, *,
+  r_max) -> (u (I,m,r_max), v (I,n,r_max))`` — batched randomized
+  SVD, matmul-only (``kernels/lowrank``); factors pre-scaled by √s
+  and masked to each item's rank, padded to the static group ``r_max``
+  (mixed-rank grouping). ``keys`` are the engine-appended per-item
+  sketch keys (``CompressionScheme.wants_key``).
+* ``rank_select(w (I,m,n) f32, alpha (I,) f32, keys (I,2) u32, mu, *,
+  r_max, cost) -> (u, v, rank (I,) i32)`` — batched automatic rank
+  selection over the same spectrum (mixed-α grouping).
+
+The matmul-only solvers (``lowrank_rsvd``, ``rank_select``,
+``project_l1_ball``, ``soft_threshold``) register a ``jnp``
+implementation only — they contain no Pallas kernel and no LAPACK
+custom call; ``interpret``/``pallas`` requests fall back to the same
+batched jnp program via the registry's backend-gap rule.
 """
 from __future__ import annotations
 
@@ -126,3 +149,12 @@ register("topk_mask", "interpret",
          partial(_pops.topk_mask_batched, impl="interpret"))
 register("topk_mask", "pallas",
          partial(_pops.topk_mask_batched, impl="pallas"))
+
+# matmul-only solvers: jnp registration only (no kernel to emulate; the
+# backend-gap rule serves interpret/pallas requests the same program)
+from repro.kernels.lowrank import ops as _lops  # noqa: E402
+
+register("lowrank_rsvd", "jnp", _lops.lowrank_rsvd_batched)
+register("rank_select", "jnp", _lops.rank_select_batched)
+register("project_l1_ball", "jnp", _pops.project_l1_ball_batched)
+register("soft_threshold", "jnp", _pops.soft_threshold_batched)

@@ -91,9 +91,21 @@ def assign_moments_batched(w: jnp.ndarray, codebooks: jnp.ndarray,
 
 
 def kmeans_batched(w: jnp.ndarray, codebooks0: jnp.ndarray,
+                   kvalid: jnp.ndarray | None = None,
                    iters: int = 25, impl: str = "jnp"):
     """Per-item Lloyd loop over a packed (I, P) item stack with per-item
     (I, K) warm-start codebooks → (codebooks (I, K), assign (I, P)).
+
+    ``kvalid`` (optional, (I,) i32) is the traced per-item count of
+    *live* codebook entries — the mixed-K grouping operand. Codebooks
+    arrive padded to the group-wide ``K_max`` (trailing entries are
+    don't-care); entries at or beyond ``kvalid_i`` are pinned to +inf,
+    so no weight ever assigns to them (distance +inf), their cluster
+    moments stay empty, and the ascending sort keeps each item's live
+    entries in the first ``kvalid_i`` slots — which is what lets the
+    grouped engine slice per-task codebooks back out of the padded
+    stack. With ``kvalid=None`` (or all-K_max) the masking is the
+    identity and the solve is unchanged (bit-identical on ``"jnp"``).
 
     ``impl``: ``"jnp"`` vmaps the core compare-count solver
     (bit-identical to the per-task scheme path); ``"interpret"`` /
@@ -103,6 +115,12 @@ def kmeans_batched(w: jnp.ndarray, codebooks0: jnp.ndarray,
     reduce, so codebooks agree to float tolerance (not bitwise); see
     tests/test_kernel_dispatch.py for the enforced bounds.
     """
+    if kvalid is not None:
+        k_max = codebooks0.shape[-1]
+        live = (jnp.arange(k_max)[None, :]
+                < jnp.asarray(kvalid, jnp.int32)[:, None])
+        codebooks0 = jnp.where(live, codebooks0.astype(jnp.float32),
+                               jnp.inf)
     if impl == "jnp":
         # deferred import: kernels must stay importable without core
         # (core.grouping imports the dispatch layer at module load)

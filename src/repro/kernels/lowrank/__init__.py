@@ -1,0 +1,1 @@
+"""Batched low-rank C-step solvers (matmul-only randomized SVD)."""

@@ -128,3 +128,45 @@ def topk_mask_batched(w: jnp.ndarray, kappa: jnp.ndarray, iters: int = 30,
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
     return mask_apply_batched(wp, lo, interpret=interp,
                               strict=False)[:, :p]
+
+
+# ----------------------------------------------------------------------
+# batched ℓ1 solvers — "project_l1_ball" / "soft_threshold" entries of
+# the dispatch layer (jnp-only: one sort+cumsum / one elementwise pass
+# over the packed item axis; no kernel to emulate)
+# ----------------------------------------------------------------------
+def project_l1_ball_batched(w: jnp.ndarray,
+                            radius: jnp.ndarray) -> jnp.ndarray:
+    """Per-item Euclidean projection onto {θ : ‖θ‖₁ ≤ radius_i}
+    (Duchi et al.) over a packed (I, P) stack.
+
+    ``radius`` is a *traced* (I,) operand, so tasks differing only in
+    the ball radius share one launch. Row-for-row the same arithmetic
+    as the per-task ``project_l1_ball`` (whose ``lax.cond`` becomes the
+    same both-branches select under vmap): rows already inside their
+    ball pass through bit-identically.
+    """
+    w = w.astype(jnp.float32)
+    radius = jnp.asarray(radius, jnp.float32)[:, None]       # (I, 1)
+    a = jnp.abs(w)
+    total = jnp.sum(a, axis=-1, keepdims=True)
+    u = jnp.sort(a, axis=-1)[:, ::-1]
+    cs = jnp.cumsum(u, axis=-1)
+    r = jnp.arange(1, w.shape[-1] + 1, dtype=jnp.float32)[None, :]
+    cond = u * r > (cs - radius)
+    rho = jnp.max(jnp.where(cond, r, 0.0), axis=-1, keepdims=True)
+    cs_rho = jnp.sum(jnp.where(r <= rho, u, 0.0), axis=-1,
+                     keepdims=True)
+    tau = (cs_rho - radius) / jnp.maximum(rho, 1.0)
+    proj = jnp.sign(w) * jnp.maximum(a - tau, 0.0)
+    return jnp.where(total <= radius, w, proj)
+
+
+def soft_threshold_batched(w: jnp.ndarray, alpha: jnp.ndarray,
+                           mu) -> jnp.ndarray:
+    """Per-item ℓ1-penalty prox θ = sign(w)·max(|w| − α_i/μ, 0) over a
+    packed (I, P) stack; α is a traced (I,) operand (mixed-α grouping).
+    Elementwise — bit-identical to the per-task scheme program."""
+    w = w.astype(jnp.float32)
+    t = (jnp.asarray(alpha, jnp.float32) / mu)[:, None]
+    return jnp.sign(w) * jnp.maximum(jnp.abs(w) - t, 0.0)
