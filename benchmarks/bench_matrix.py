@@ -1,0 +1,54 @@
+"""Scenario matrix: short LC loops over every reduced architecture
+config × scheme family, §7 monitors asserted per cell.
+
+    PYTHONPATH=src python -m benchmarks.run --only matrix --artifact .
+
+Each row is one cell run by ``benchmarks.matrix_common.run_cell`` — the
+exact code path ``pytest -m matrix`` exercises. A monitor violation
+(loss not decreasing, C step increasing its own objective, non-finite
+λ, ratio ≤ 1) raises and fails the whole bench; deliberately
+unsupported cells appear as ``status: "skipped"`` rows with a reason
+string, never silently dropped. ``MATRIX_ARCHS`` / ``MATRIX_FAMILIES``
+(comma-separated env vars) subset the enumeration for smoke CI.
+"""
+from __future__ import annotations
+
+import logging
+import sys
+
+from benchmarks.matrix_common import (
+    MonitorViolation, enumerate_cells, run_cell)
+
+
+def run() -> list[dict]:
+    logging.disable(logging.INFO)  # trainer per-step records are noisy
+    cells = enumerate_cells()
+    rows, failures = [], []
+    for i, (arch, family) in enumerate(cells):
+        print(f"# [{i + 1}/{len(cells)}] {arch}/{family}",
+              file=sys.stderr, flush=True)
+        try:
+            rows.append(run_cell(arch, family))
+        except MonitorViolation as e:
+            failures.append(str(e))
+            rows.append({
+                "name": f"matrix/{arch}/{family}", "us_per_call": 0.0,
+                "derived": "MONITOR-FAIL " + "; ".join(e.violations),
+                "status": "failed", "arch": arch, "family": family,
+                "violations": e.violations,
+            })
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    for r in skipped:
+        print(f"# skipped {r['name']}: {r['reason']}", file=sys.stderr)
+    if failures:
+        # hard failure AFTER the full sweep so one broken cell doesn't
+        # hide the status of the rest (the raise fails the bench run)
+        raise MonitorViolation(
+            f"{len(failures)}/{len(cells)} cells",
+            [v for f in failures for v in f.splitlines()])
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

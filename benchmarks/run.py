@@ -20,7 +20,7 @@ import time
 
 
 MODULES = ["quantize", "prune", "lowrank", "showcase", "cstep", "serve",
-           "roofline", "perf_variants"]
+           "roofline", "perf_variants", "matrix"]
 
 
 def _write_artifact(directory: str, name: str, rows: list,

@@ -20,12 +20,20 @@ from repro.core.schemes.base import CompressionScheme
 
 
 def topk_magnitude_mask(w: jnp.ndarray, kappa: int) -> jnp.ndarray:
-    """Boolean mask keeping the κ largest |w| (ties resolved arbitrarily)."""
+    """Boolean mask keeping *exactly* min(κ, w.size) largest |w|.
+
+    Ties at the κ-th magnitude are broken toward the lower index
+    (``lax.top_k`` order). A threshold mask (``|w| >= kth``) keeps the
+    whole tied class — on tie-heavy leaves (e.g. mamba ``A_log``, whose
+    init repeats each value per row) that makes θ infeasible
+    (‖θ‖₀ ≫ κ), under-reports the C-step distortion, and falsifies the
+    κ-nonzero ``bits()`` accounting; the §7 monitor then flags a
+    distortion *increase* on the first C step after the ties break.
+    """
     a = jnp.abs(w.ravel())
-    # kth largest via partition; mask by strict threshold + tie-fill is
-    # overkill for the C step — the projection is any top-κ support.
-    thresh = jax.lax.top_k(a, kappa)[0][-1]
-    return (jnp.abs(w) >= thresh)
+    idx = jax.lax.top_k(a, min(int(kappa), a.size))[1]
+    mask = jnp.zeros(a.shape, bool).at[idx].set(True)
+    return mask.reshape(w.shape)
 
 
 def project_l1_ball(w: jnp.ndarray, radius: float) -> jnp.ndarray:

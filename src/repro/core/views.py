@@ -89,19 +89,29 @@ class AsMatrix(View):
 
 
 class AsStacked(View):
-    """Leading axis = stack (layers/experts); scheme is vmapped over it."""
+    """Leading axis = stack (layers/experts); scheme is vmapped over it.
+
+    ``stack_ndim`` merges that many leading axes into the stack: a scanned
+    MoE leaf ``(L, E, m, n)`` with ``stack_ndim=2`` becomes ``L·E`` items —
+    per-(layer, expert) codebooks/ranks/supports — instead of ``L`` items
+    of flattened expert blocks. The default (1) is the historical behavior.
+    """
 
     stacked = True
 
-    def __init__(self, domain: str = "vector"):
+    def __init__(self, domain: str = "vector", stack_ndim: int = 1):
         assert domain in ("vector", "matrix")
+        assert stack_ndim >= 1
         self.domain = domain
+        self.stack_ndim = int(stack_ndim)
 
     def to_compressible(self, leaves):
         assert len(leaves) == 1, "AsStacked views exactly one parameter"
         (l,) = leaves
-        assert l.ndim >= 2
-        n = l.shape[0]
+        k = self.stack_ndim
+        assert l.ndim >= k + 1, \
+            f"AsStacked(stack_ndim={k}) needs ndim>{k}, got {l.shape}"
+        n = int(np.prod(l.shape[:k]))
         if self.domain == "vector":
             return l.reshape(n, -1).astype(jnp.float32)
         return l.reshape(n, -1, l.shape[-1]).astype(jnp.float32)

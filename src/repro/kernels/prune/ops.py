@@ -6,8 +6,7 @@ import jax.numpy as jnp
 
 from repro.kernels.prune import ref
 from repro.kernels.prune.prune import (
-    LANES, ROWS, count_above, count_above_batched, mask_apply,
-    mask_apply_batched)
+    LANES, ROWS, count_above, count_above_batched)
 
 
 def _on_tpu() -> bool:
@@ -25,18 +24,22 @@ def _pad(w):
 
 def topk_mask(w: jnp.ndarray, kappa: int, iters: int = 30,
               use_pallas: bool | str = "auto") -> jnp.ndarray:
-    """θ = w · 1[|w| ≥ t*], with t* bisected so that nnz(θ) ≈ κ.
+    """θ = w · 1[top-κ support], exactly min(κ, nnz-reachable) kept.
 
-    Bisection converges to the exact order statistic up to float-ulp ties;
-    any remaining tie-overshoot is the same arbitrary tie-breaking the
-    paper's top-κ projection allows.
+    The kernel path bisects a threshold over the streaming count kernel,
+    then resolves the boundary class in index order so magnitude ties at
+    the κ-th entry never over-keep (an ``|w| ≥ t`` mask keeps the whole
+    tied class — infeasible for the ℓ0 constraint and a §7-monitor
+    violation once the ties break). Tie-break matches ``lax.top_k``:
+    lower index wins.
     """
     if use_pallas == "auto":
         use_pallas = _on_tpu()
     flat = w.ravel().astype(jnp.float32)
     if not use_pallas:
-        t = ref.topk_threshold_ref(flat, kappa)
-        return jnp.where(jnp.abs(w) >= t, w, 0.0)
+        idx = jax.lax.top_k(jnp.abs(flat), min(int(kappa), flat.size))[1]
+        mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
+        return jnp.where(mask.reshape(w.shape), w, 0.0)
 
     wp, p = _pad(flat)
     interp = not _on_tpu()
@@ -57,11 +60,17 @@ def topk_mask(w: jnp.ndarray, kappa: int, iters: int = 30,
         return lo_, hi_
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    # invariant: count(>lo) > κ ≥ count(>hi); at convergence both sit at
-    # the (κ+1)-th order statistic, so masking with hi keeps exactly κ
-    # (fewer under float-identical ties — same arbitrary tie-break as any
-    # top-κ projection).
-    out = mask_apply(wp, hi, interpret=interp)[:p]
+    # invariant: count(>lo) > κ ≥ count(>hi) (unless fewer than κ
+    # nonzeros — then hi → 0 and every nonzero is kept). Keep the
+    # strictly-above-hi class whole, then fill the remaining κ − n_hi
+    # slots from the boundary class (lo, hi] in index order — exactly κ
+    # kept even on float-identical ties, same lowest-index tie-break as
+    # the jnp path.
+    a = jnp.abs(wp)
+    n_hi = counts(hi).astype(jnp.int32)
+    boundary = (a > lo) & (a <= hi)
+    fill = jnp.cumsum(boundary.astype(jnp.int32)) <= (kappa - n_hi)
+    out = jnp.where((a > hi) | (boundary & fill), wp, 0.0)[:p]
     return out.reshape(w.shape)
 
 
@@ -89,18 +98,21 @@ def topk_mask_batched(w: jnp.ndarray, kappa: jnp.ndarray, iters: int = 30,
     scheme solver), ``"interpret"`` (Pallas kernels in interpret mode —
     the CPU/CI validation path), or ``"pallas"`` (compiled, TPU):
     per-item threshold bisection over :func:`count_above_batched`, then
-    one :func:`mask_apply_batched` sweep.
+    one fused boundary-resolution sweep.
 
-    The kernel path bisects on the *feasibility* predicate
-    ``count(|w| ≥ t) ≥ κ`` and masks with ``|w| ≥ lo`` where ``lo`` is
-    the best feasible threshold seen — so it never keeps fewer than κ
-    weights. This matters on magnitude ties at the κ boundary (±w pairs
-    are exact-magnitude ties): a strict ``>`` mask at the converged
-    threshold would drop the whole tied class, pruning the largest
-    weights. Like the jnp sort path, ties at the threshold over-keep
-    (all tied weights survive) — the paper's top-κ projection allows
-    any tie-break; near-ties inside the final unconverged interval
-    (sub-float-ulp after ``iters`` halvings) share that caveat.
+    Every backend keeps *exactly* min(κ_i, P) weights per item, ties at
+    the κ boundary broken toward the lower index (the ``lax.top_k``
+    order, bit-matching the per-task scheme solver). Over-keeping the
+    tied class — what a plain ``|w| ≥ t`` threshold mask does — makes θ
+    infeasible for the ℓ0 constraint, under-reports distortion, and
+    trips the §7 monotonicity monitor once the ties break (mamba
+    ``A_log`` leaves tie in 128-wide classes at init). The kernel path
+    bisects on the feasibility predicate ``count(|w| ≥ t) ≥ κ``, keeps
+    the ``|w| ≥ hi`` class whole (``hi`` infeasible, so < κ weights),
+    and fills the remaining slots from the ``[lo, hi)`` boundary class
+    in index order. Near-ties inside the final unconverged interval
+    (sub-float-ulp after ``iters`` halvings) are filled by index rather
+    than magnitude order — still exactly κ, distortion-equal to ulp.
     """
     w = w.astype(jnp.float32)
     kappa = jnp.asarray(kappa, jnp.int32)
@@ -126,8 +138,19 @@ def topk_mask_batched(w: jnp.ndarray, kappa: jnp.ndarray, iters: int = 30,
         return lo_, hi_
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    return mask_apply_batched(wp, lo, interpret=interp,
-                              strict=False)[:, :p]
+    # lo feasible (count(|w| ≥ lo) ≥ κ), hi infeasible (< κ): keep the
+    # |w| ≥ hi class whole, fill the remaining κ − n_hi slots from the
+    # [lo, hi) boundary class in index order (exact κ under ties; the
+    # item axis is padded with zeros *after* the live entries, so real
+    # boundary weights always outrank the padding in the cumsum).
+    a = jnp.abs(wp)
+    n_hi = count_above_batched(wp, hi, interpret=interp,
+                               strict=False).astype(jnp.int32)   # (I,)
+    boundary = (a >= lo[:, None]) & (a < hi[:, None])
+    fill = (jnp.cumsum(boundary.astype(jnp.int32), axis=-1)
+            <= (kappa - n_hi)[:, None])
+    keep = (a >= hi[:, None]) | (boundary & fill)
+    return jnp.where(keep, wp, 0.0)[:, :p]
 
 
 # ----------------------------------------------------------------------

@@ -97,8 +97,9 @@ def mask_apply(w: jnp.ndarray, t: jnp.ndarray, interpret: bool = True):
 # ----------------------------------------------------------------------
 # batched (items-grid) variants — one pallas_call per packed group.
 # ``strict`` picks the comparison (|w| > t vs |w| ≥ t): the bisection
-# driver needs the ≥ form so threshold ties keep *at least* κ weights
-# (the jnp top-κ semantics) instead of dropping the whole tied class.
+# driver in ops.py bisects on the ≥ form (feasibility: count(|w| ≥ t)
+# ≥ κ) so its lo threshold never drops a whole tied class; the driver
+# then resolves boundary ties down to exactly κ in index order.
 # ----------------------------------------------------------------------
 def _count_batched_kernel(w_ref, t_ref, out_ref, *, strict: bool):
     tile = pl.program_id(1)                      # fast axis: tiles

@@ -21,15 +21,16 @@ def topk_threshold_ref(w: jnp.ndarray, kappa: int) -> jnp.ndarray:
 def topk_mask_batched_ref(w: jnp.ndarray, kappa: jnp.ndarray) -> jnp.ndarray:
     """Per-item top-κ mask with κ a *traced* (I,) operand.
 
-    Sort each row's magnitudes descending, gather the κ_i-th largest as
-    the per-item threshold, keep ``|w| >= t_i``. The threshold value is
-    the exact order statistic — identical to ``lax.top_k(a, κ)[0][-1]``
-    — so this is the bit-exact jnp backend for the ``topk_mask`` solver
-    (the kernel path bisects to the same statistic and keeps exactly κ
-    on distinct magnitudes).
+    Stable argsort by descending magnitude gives each entry its rank
+    (ties ranked by ascending index — the ``lax.top_k`` order); keep
+    ``rank < κ_i``. Exactly min(κ_i, P) nonzeros per item even under
+    magnitude ties, which a threshold mask (``|w| >= kth``) violates by
+    keeping the whole tied class: that makes θ infeasible for the ℓ0
+    constraint and breaks the §7 C-step monotonicity monitor. Support
+    and tie-break match the per-task scheme solver bit-exactly.
     """
     a = jnp.abs(w.astype(jnp.float32))
-    a_desc = jnp.sort(a, axis=-1)[:, ::-1]
-    idx = jnp.maximum(kappa.astype(jnp.int32) - 1, 0)[:, None]
-    thresh = jnp.take_along_axis(a_desc, idx, axis=-1)     # (I, 1)
-    return jnp.where(a >= thresh, w, 0.0)
+    order = jnp.argsort(-a, axis=-1)            # stable: ties → low index
+    rank = jnp.argsort(order, axis=-1)          # inverse permutation
+    keep = rank < kappa.astype(jnp.int32)[:, None]
+    return jnp.where(keep, w, 0.0)

@@ -152,22 +152,28 @@ def test_jnp_topk_solver_matches_pertask_scheme_bitwise():
         np.testing.assert_array_equal(np.asarray(mj[i]), np.asarray(exp))
 
 
-def test_batched_topk_kernel_threshold_ties_keep_at_least_kappa():
-    """Exact-magnitude ties at the κ boundary (±w pairs) must over-keep
-    like the jnp path, never under-keep: a strict > mask at the
-    converged threshold would prune the largest weights entirely."""
+def test_batched_topk_kernel_threshold_ties_keep_exactly_kappa():
+    """Exact-magnitude ties at the κ boundary (±w pairs) keep *exactly*
+    κ weights, lowest index first — never the whole tied class (that θ
+    is infeasible for the ℓ0 constraint and trips the §7 monitor once
+    the ties break) and never fewer (a strict > mask at the converged
+    threshold would prune the largest weights entirely)."""
     w = jnp.array([[2.0, -2.0, 1.0, 0.5],
                    [3.0, 3.0, -3.0, 0.1]], jnp.float32)
     kappa = jnp.array([1, 2], jnp.int32)
     mj = pops.topk_mask_batched(w, kappa, impl="jnp")
     mi = pops.topk_mask_batched(w, kappa, impl="interpret")
     np.testing.assert_array_equal(np.asarray(mj), np.asarray(mi))
-    # row 0: both tied ±2.0 survive (κ=1 over-keeps the tied class);
-    # row 1: all three tied 3.0s survive (κ=2)
-    assert int(jnp.sum(mi[0] != 0)) == 2
-    assert int(jnp.sum(mi[1] != 0)) == 3
+    # row 0: only the first of the tied ±2.0 pair survives (κ=1);
+    # row 1: the first two of the three tied 3.0s survive (κ=2)
     np.testing.assert_array_equal(np.asarray(mi[0]),
-                                  np.asarray([2.0, -2.0, 0.0, 0.0]))
+                                  np.asarray([2.0, 0.0, 0.0, 0.0]))
+    np.testing.assert_array_equal(np.asarray(mi[1]),
+                                  np.asarray([3.0, 3.0, 0.0, 0.0]))
+    # same support as the per-task scheme solver (lax.top_k order)
+    for i, k in enumerate((1, 2)):
+        exp = ConstraintL0Pruning(kappa=k).compress(w[i], None)["theta"]
+        np.testing.assert_array_equal(np.asarray(mj[i]), np.asarray(exp))
 
 
 def test_topk_traced_kappa_under_jit():

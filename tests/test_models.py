@@ -28,18 +28,38 @@ def _batch(cfg, b=2, s=16):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_arch_smoke_train_step(arch):
-    """Reduced same-family config: one forward/backward on CPU,
-    output shapes + no NaNs (assignment requirement)."""
+    """Reduced same-family config: one *jitted* forward/backward on
+    CPU, output shapes + no NaNs (assignment requirement)."""
     cfg = reduced_config(get_config(arch))
     params = init_params(KP, cfg)
     batch = _batch(cfg)
-    (loss, metrics), grads = jax.value_and_grad(
-        lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+    step = jax.jit(jax.value_and_grad(
+        lambda p, b: loss_fn(p, b, cfg)[0], has_aux=False))
+    loss, grads = step(params, batch)
     assert np.isfinite(float(loss))
     gnorm = jax.tree_util.tree_reduce(
         lambda a, g: a + float(jnp.sum(g.astype(jnp.float32) ** 2)),
         grads, 0.0)
     assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_exposes_compressible_matrix_leaf(arch):
+    """Every reduced config must expose ≥1 matrix-eligible leaf (the
+    scenario matrix's low-rank/rank-select families need one) — from
+    shapes only, no init."""
+    import sys
+    from pathlib import Path
+    root = Path(__file__).resolve().parent.parent
+    if str(root) not in sys.path:
+        sys.path.insert(0, str(root))
+    from benchmarks.matrix_common import leaf_plan
+    cfg = reduced_config(get_config(arch))
+    plan = leaf_plan(cfg)
+    matrix = [i for i in plan if i.kind == "matrix"]
+    assert matrix, f"{arch}: no matrix-shaped compressible leaf"
+    for i in matrix:
+        assert len(i.item_shape) == 2
 
 
 @pytest.mark.parametrize("arch", ARCHS)

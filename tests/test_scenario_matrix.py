@@ -1,0 +1,235 @@
+"""Scenario-matrix tests.
+
+Two tiers in one file:
+
+* ``@pytest.mark.matrix`` (opt-in, tier-2): one test per (arch, family)
+  cell, running literally the same ``run_cell`` the bench artifact is
+  built from — ``pytest -m matrix`` and ``benchmarks.run --only matrix``
+  cannot drift apart.
+* unmarked (tier-1, fast): the task-derivation rules from shapes only
+  (no training), and the monitor plumbing — a deliberately-broken
+  scheme must make the cell runner fail loudly, so the §7 assertions
+  can't silently rot into no-ops.
+"""
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# benchmarks/ is a plain directory under the repo root (no package
+# install); `python -m pytest` from the root puts it on sys.path, a bare
+# `pytest` binary does not — make both work.
+ROOT = Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from benchmarks.matrix_common import (  # noqa: E402
+    FAMILIES, MonitorViolation, build_tasks, enumerate_cells, leaf_plan,
+    run_cell, run_lc_cell)
+from repro.configs import ARCHS, get_config, reduced_config  # noqa: E402
+from repro.core.schemes.base import CompressionScheme  # noqa: E402
+from repro.core.tasks import CompressionTask, check_disjoint  # noqa: E402
+from repro.core.views import AsStacked, AsVector  # noqa: E402
+
+
+# ----------------------------------------------------------------------
+# Tier-2: the matrix itself (opt-in marker)
+# ----------------------------------------------------------------------
+@pytest.mark.matrix
+@pytest.mark.parametrize("arch,family", enumerate_cells())
+def test_matrix_cell(arch, family):
+    row = run_cell(arch, family)
+    if row["status"] == "skipped":
+        pytest.skip(row["reason"])
+    assert row["status"] == "ok"
+    assert row["compression_ratio"] > 1.0
+    assert row["ce_final"] < row["ce_init"]
+
+
+# ----------------------------------------------------------------------
+# Tier-1: task-derivation rules (shapes only, no training)
+# ----------------------------------------------------------------------
+def _shape_params(cfg):
+    import jax
+    from repro.models import init_params
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_derived_tasks_cover_every_family(arch):
+    """Each family derives ≥1 task; resolved tasks are disjoint (no
+    leaf claimed twice) and every pattern matches exactly one leaf."""
+    cfg = reduced_config(get_config(arch))
+    shapes = _shape_params(cfg)
+    for family in FAMILIES:
+        tasks = build_tasks(cfg, family)
+        assert tasks, f"{arch}/{family}: no tasks derived"
+        resolved = [t.resolve(shapes) for t in tasks]
+        check_disjoint(resolved)  # raises on overlap
+        assert all(len(t.paths) == 1 for t in resolved)
+
+
+def test_ssm_thin_leaves_never_matrix_eligible():
+    """Jamba's mamba conv kernels / gate stacks are thin 2-D items —
+    they must classify as vector-only, so LowRank/AsMatrix never sees a
+    non-matrix SSM leaf (the crash class this matrix exists to catch)."""
+    cfg = reduced_config(get_config("jamba-v0.1-52b"))
+    plan = {i.path: i for i in leaf_plan(cfg)}
+    conv = [i for p, i in plan.items() if p.endswith("conv_w")]
+    assert conv, "expected mamba conv kernels in the param tree"
+    assert all(i.kind == "vector" for i in conv)
+    # and every low-rank task's item really is a fat-enough matrix
+    import re
+    by_pattern = {"^" + re.escape(i.path) + "$": i
+                  for i in leaf_plan(cfg)}
+    lowrank = build_tasks(cfg, "lowrank")
+    assert not any("conv_w" in t.pattern for t in lowrank)
+    from benchmarks.matrix_common import MATRIX_MIN_DIM
+    for t in lowrank:
+        info = by_pattern[t.pattern]
+        assert info.kind == "matrix"
+        assert len(info.item_shape) == 2
+        assert min(info.item_shape) >= MATRIX_MIN_DIM
+
+
+def test_moe_expert_leaves_get_per_expert_views():
+    """Scanned MoE weights (L, E, m, n) must compress per expert: the
+    derived view stacks BOTH leading axes (stack_ndim=2)."""
+    cfg = reduced_config(get_config("mixtral-8x7b"))
+    tasks = build_tasks(cfg, "lowrank")
+    expert = [t for t in tasks if "w_up" in t.pattern]
+    assert expert, "expected expert w_up tasks"
+    for t in expert:
+        assert isinstance(t.view, AsStacked)
+        assert t.view.stack_ndim == 2
+
+
+def test_tied_embeddings_counted_once():
+    """gemma3 ties embeddings: one tokens leaf, claimed by exactly one
+    task — no double-counting in compression_ratio by construction."""
+    cfg = reduced_config(get_config("gemma3-27b"))
+    assert cfg.tie_embeddings
+    tasks = build_tasks(cfg, "quantize")
+    embed_tasks = [t for t in tasks if "embed" in t.pattern]
+    assert len(embed_tasks) == 1
+    resolved = [t.resolve(_shape_params(cfg)) for t in tasks]
+    check_disjoint(resolved)
+    embed_paths = [p for t in resolved for p in t.paths
+                   if p.startswith("embed/")]
+    assert embed_paths == ["embed/tokens"]
+
+
+def test_unsupported_cells_surface_as_skips(monkeypatch):
+    """A cell in UNSUPPORTED must come back as an explicit skip row with
+    the reason string — never silently dropped."""
+    import benchmarks.matrix_common as mc
+    monkeypatch.setitem(mc.UNSUPPORTED,
+                        ("phi3-mini-3.8b", "prune"), "test reason")
+    row = run_cell("phi3-mini-3.8b", "prune")
+    assert row["status"] == "skipped"
+    assert row["reason"] == "test reason"
+    assert "SKIP" in row["derived"]
+
+
+# ----------------------------------------------------------------------
+# Tier-1: monitor plumbing must fail loudly
+# ----------------------------------------------------------------------
+def _tiny_cfg():
+    """Smallest config that runs the full trainer path: one unrolled
+    transformer block."""
+    cfg = reduced_config(get_config("phi3-mini-3.8b"))
+    return cfg.with_(pattern_reps=1)
+
+
+class _WorseningScheme(CompressionScheme):
+    """Deliberately broken: the 'projection' overshoots to 3w, so the
+    C step INCREASES its own objective ‖(w−λ/μ)−Δ(Θ)‖² — exactly what
+    the §7 shifted-distortion monitor exists to catch."""
+
+    domain = "vector"
+
+    def group_key(self):
+        return None  # exotic scheme: per-task path
+
+    def init(self, w, key=None):
+        return {"theta": w}
+
+    def compress(self, w, theta, mu=None):
+        return {"theta": 3.0 * w}
+
+    def decompress(self, theta):
+        return theta["theta"]
+
+    def bits(self, theta, float_bits: int = 32):
+        return theta["theta"].size  # 1 bit/weight: ratio monitor green
+
+
+class _BloatedScheme(CompressionScheme):
+    """Valid projection (identity ⇒ distortion 0, never increases) whose
+    storage accounting is worse than dense — must trip ONLY the
+    compression_ratio monitor."""
+
+    domain = "vector"
+
+    def group_key(self):
+        return None
+
+    def init(self, w, key=None):
+        return {"theta": w}
+
+    def compress(self, w, theta, mu=None):
+        return {"theta": w}
+
+    def decompress(self, theta):
+        return theta["theta"]
+
+    def bits(self, theta, float_bits: int = 32):
+        return theta["theta"].size * 64 * float_bits
+
+
+def _one_task(scheme):
+    return [CompressionTask("broken", r"^embed/tokens$", AsVector(),
+                            scheme)]
+
+
+def test_broken_scheme_fails_loudly():
+    with pytest.raises(MonitorViolation) as ei:
+        run_lc_cell(_tiny_cfg(), _one_task(_WorseningScheme()),
+                    cell="plumbing/worsen", steps_per_l=2)
+    assert any("c_step_shifted_distortion" in v
+               for v in ei.value.violations)
+
+
+def test_ratio_monitor_fails_loudly():
+    with pytest.raises(MonitorViolation) as ei:
+        run_lc_cell(_tiny_cfg(), _one_task(_BloatedScheme()),
+                    cell="plumbing/bloat", steps_per_l=2)
+    assert any("compression_ratio" in v for v in ei.value.violations)
+    # the projection itself is sound: distortion monitor stays green
+    assert not any("shifted_distortion" in v
+                   for v in ei.value.violations)
+
+
+# ----------------------------------------------------------------------
+# Tier-1: AsStacked stack_ndim regression (per-expert views)
+# ----------------------------------------------------------------------
+def test_asstacked_multi_axis_roundtrip():
+    leaf = jnp.arange(2 * 3 * 4 * 5, dtype=jnp.float32).reshape(2, 3, 4, 5)
+    for domain, item_shape in (("vector", (20,)), ("matrix", (4, 5))):
+        v = AsStacked(domain, stack_ndim=2)
+        x = v.to_compressible([leaf])
+        assert x.shape == (6,) + item_shape
+        assert v.item_count(x) == 6 and v.item_shape(x) == item_shape
+        (back,) = v.from_compressible(x, [leaf])
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(leaf))
+
+
+def test_asstacked_default_unchanged():
+    leaf = jnp.ones((3, 4, 5))
+    v = AsStacked("matrix")
+    assert v.stack_ndim == 1
+    assert v.to_compressible([leaf]).shape == (3, 4, 5)
+    v2 = AsStacked("vector")
+    assert v2.to_compressible([leaf]).shape == (3, 20)

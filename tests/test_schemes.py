@@ -214,6 +214,38 @@ def test_additive_alternation_monotone():
     assert float(a.distortion(w, th)) <= d0 + 1e-4
 
 
+def test_l0_prune_exact_kappa_under_magnitude_ties():
+    """Regression (scenario matrix, jamba × additive): mamba ``A_log``
+    repeats each value 128× at init, so the top-κ boundary is a wide
+    tied class. A threshold mask (``|w| >= kth``) keeps the whole class
+    — ‖θ‖₀ ≫ κ, infeasible, with under-reported distortion and a fake
+    ``bits()`` ratio. The projection must keep *exactly* κ."""
+    a_log = jnp.log(jnp.arange(1, 5, dtype=jnp.float32))
+    w = a_log[None, :].repeat(128, 0).ravel()        # 4 values × 128
+    th = ConstraintL0Pruning(kappa=64).compress(w, None)
+    assert int(jnp.sum(th["theta"] != 0)) == 64
+
+
+def test_additive_monotone_across_c_steps_on_tied_weights():
+    """Regression (scenario matrix, jamba × additive): with the tied
+    init above, the over-kept infeasible θ^DC made the *next* C step —
+    on weights whose L-step noise broke the ties — measure a distortion
+    increase (9.3 → 55 on the real cell), tripping the §7 monitor. With
+    an exact-κ projection the alternation stays monotone: the new θ
+    must beat the old θ on the new weights."""
+    a_log = jnp.log(jnp.arange(1, 5, dtype=jnp.float32))
+    w0 = a_log[None, :].repeat(128, 0).ravel()
+    sch = AdditiveCombination(
+        [AdaptiveQuantization(k=2, iters=5),
+         ConstraintL0Pruning(kappa=w0.size // 8)], iters=2)
+    th = sch.init(w0)
+    assert int(jnp.sum(th["parts"][1]["theta"] != 0)) <= w0.size // 8
+    w1 = w0 + 0.05 * jax.random.normal(jax.random.PRNGKey(0), w0.shape)
+    pre = float(sch.distortion(w1, th))
+    post = float(sch.distortion(w1, sch.compress(w1, th)))
+    assert post <= pre * (1 + 1e-5) + 1e-8
+
+
 # ----------------------------------------------------------------------
 # Hypothesis property tests
 # ----------------------------------------------------------------------
@@ -253,3 +285,50 @@ def test_prop_ternary_scale_nonneg(seed):
     assert float(th["scale"]) >= 0.0
     d = float(t.distortion(w, th))
     assert d <= float(jnp.sum(w**2)) + 1e-5  # never worse than all-zero
+
+
+# ----------------------------------------------------------------------
+# Per-expert views: AsStacked(stack_ndim=2) over MoE-shaped leaves
+# (scenario-matrix regression: a scanned expert tensor (L, E, m, n)
+# must compress per (layer, expert), not as L flattened expert blocks)
+# ----------------------------------------------------------------------
+def test_stacked_view_per_expert_task_roundtrip():
+    from repro.core.tasks import CompressionTask
+    from repro.core.views import AsStacked
+
+    key = jax.random.PRNGKey(3)
+    params = {"ffn": {"w_up": jax.random.normal(key, (2, 3, 16, 8))}}
+    t = CompressionTask("experts", r"^ffn/w_up$",
+                        AsStacked("matrix", stack_ndim=2),
+                        LowRank(2, randomized=False)).resolve(params)
+    x = t.compressible(params)
+    assert x.shape == (6, 16, 8)          # L·E items, each (m, n)
+    theta = t.scheme_init(x)
+    assert theta["u"].shape == (6, 16, 2)  # one rank-2 factor per expert
+    a = t.scatter_decompressed(t.scheme_decompress(theta), params)
+    assert a["ffn/w_up"].shape == (2, 3, 16, 8)
+    # per-expert truncated SVD must beat one shared flattened solve:
+    # each item's distortion is the item's own tail energy
+    for i in range(6):
+        wi = np.asarray(x)[i]
+        s = np.linalg.svd(wi, compute_uv=False)
+        di = float(np.sum(
+            (wi - np.asarray(theta["u"][i] @ theta["v"][i].T)) ** 2))
+        np.testing.assert_allclose(di, float((s[2:] ** 2).sum()),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_stacked_view_vector_domain_multi_axis():
+    from repro.core.views import AsStacked
+
+    leaf = jnp.arange(2 * 3 * 8, dtype=jnp.float32).reshape(2, 3, 8)
+    v = AsStacked("vector", stack_ndim=2)
+    x = v.to_compressible([leaf])
+    assert x.shape == (6, 8)
+    s = ConstraintL0Pruning(2)
+    theta = jax.vmap(lambda xi: s.init(xi))(x)
+    # per-item support: exactly κ survivors in every (layer, expert) row
+    nnz = np.asarray(jnp.sum(theta["theta"] != 0, axis=1))
+    assert (nnz == 2).all()
+    (back,) = v.from_compressible(x, [leaf])
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(leaf))
