@@ -38,6 +38,9 @@ _OP_RE = re.compile(
     r"(\([^()]*\)|[a-z]\w*\[[\d,]*\](?:\{[^}]*\})?)\s*"
     r"([\w\-]+)\((.*)$")
 _COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+# unoptimized HLO (jit(...).lower().compiler_ir("hlo")) emits bare
+# computation headers with no signature: "name.N {" / "ENTRY main.M {"
+_COMP_BARE_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\{$")
 _CALL_ATTR_RE = re.compile(
     r"(?:calls|to_apply|body|condition|branch_computations)="
     r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
@@ -107,8 +110,10 @@ def parse_module(hlo_text: str) -> dict[str, list[Op]]:
     comps: dict[str, list[Op]] = {}
     cur: list[Op] | None = None
     for line in hlo_text.splitlines():
-        if line.rstrip().endswith("{") and "->" in line:
-            m = _COMP_RE.match(line.strip())
+        if line.rstrip().endswith("{") \
+                and not line.lstrip().startswith("HloModule"):
+            m = (_COMP_RE.match(line.strip()) if "->" in line
+                 else _COMP_BARE_RE.match(line.rstrip()))
             if m:
                 cur = []
                 comps[m.group(1)] = cur
@@ -397,3 +402,82 @@ class Analyzer:
 
 def analyze_hlo(hlo_text: str, skip_scopes: tuple = ()) -> Stats:
     return Analyzer(hlo_text, skip_scopes).entry_stats()
+
+
+# ----------------------------------------------------------------------
+# Static-analysis helpers over a parsed module (consumed by
+# ``repro.analysis.lint``'s HLO layer — see that package). These work on
+# ``parse_module`` output, so they see every computation, including
+# while bodies and fusion subcomputations.
+# ----------------------------------------------------------------------
+_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+_ALIAS_RE = re.compile(
+    r"input_output_alias=\{([^}]*(?:\{[^}]*\}[^}]*)*)\}")
+_ALIAS_ENTRY_RE = re.compile(r"\{[\d,\s]*\}:\s*\((\d+)")
+
+#: custom-call target substrings that mark a LAPACK/cuSOLVER-style
+#: linalg routine — the op family with NO SPMD partitioning rule, whose
+#: presence under plain GSPMD sharding is the PR-2 miscompile shape
+LINALG_TARGET_MARKERS = ("lapack", "cusolver", "cusolver_", "magma",
+                         "hipsolver", "Qr", "Eigh", "Svd", "getrf",
+                         "geqrf", "orgqr", "gesdd", "gesvd", "syevd",
+                         "potrf")
+#: custom-call target substrings that mark a host callback (pure_callback
+#: / io_callback / debug.print) — a hard synchronization point that also
+#: cannot shard
+CALLBACK_TARGET_MARKERS = ("callback", "py_func", "host")
+
+
+def custom_call_targets(comps: dict[str, list[Op]]) -> dict[str, int]:
+    """{custom-call target: occurrence count} across all computations."""
+    out: dict[str, int] = {}
+    for name, ops in comps.items():
+        if name == "__entry__":   # alias of the ENTRY computation
+            continue
+        for op in ops:
+            if op.opcode != "custom-call":
+                continue
+            m = _TARGET_RE.search(op.rest)
+            target = m.group(1) if m else "<unknown>"
+            out[target] = out.get(target, 0) + 1
+    return out
+
+
+def linalg_custom_calls(comps: dict[str, list[Op]]) -> list[str]:
+    """Custom-call targets that look like LAPACK/solver routines."""
+    return sorted(t for t in custom_call_targets(comps)
+                  if any(mk.lower() in t.lower()
+                         for mk in LINALG_TARGET_MARKERS))
+
+
+def host_callbacks(comps: dict[str, list[Op]]) -> list[str]:
+    """Custom-call targets that look like host callbacks."""
+    return sorted(t for t in custom_call_targets(comps)
+                  if any(mk in t.lower() for mk in CALLBACK_TARGET_MARKERS))
+
+
+def f64_ops(comps: dict[str, list[Op]]) -> list[str]:
+    """Names of ops producing f64/c128 results (accidental float64 —
+    usually a Python float that upcast under ``jax_enable_x64``, or a
+    ``np.float64`` scalar leaking into the trace)."""
+    out = []
+    for name, ops in comps.items():
+        if name == "__entry__":
+            continue
+        for op in ops:
+            for dt, _ in _SHAPE_RE.findall(op.type_str):
+                if dt in ("f64", "c128") and op.opcode not in (
+                        "convert",):
+                    out.append(op.name)
+                    break
+    return out
+
+
+def parse_input_output_alias(hlo_text: str) -> set[int]:
+    """Parameter indices aliased into outputs per the module header's
+    ``input_output_alias={ {0}: (1, {}, may-alias), ... }`` — the
+    compiled record of which donated inputs were actually reused."""
+    m = _ALIAS_RE.search(hlo_text)
+    if not m:
+        return set()
+    return {int(e) for e in _ALIAS_ENTRY_RE.findall(m.group(1))}

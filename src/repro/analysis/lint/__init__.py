@@ -1,0 +1,19 @@
+"""Three-layer static analysis for the LC engine.
+
+The scheme/dispatch contract that makes compressions pluggable is easy
+to violate silently (a ``float()`` on a traced Θ leaf, a solver name
+with no registered backend, a LAPACK custom-call under plain GSPMD).
+This package machine-checks it:
+
+* Layer 1 — AST rules over the source tree (``ast_rules``),
+* Layer 2 — scheme/registry declaration checks (``contract``),
+* Layer 3 — lowered-HLO rules + retrace counting (``hlo_rules``,
+  ``trace_count``).
+
+CLI: ``python -m repro.analysis.lint`` (see ``cli``); rule table and
+suppression story: docs/extending.md, "The lint contract".
+"""
+from repro.analysis.lint.findings import Baseline, Finding, Report
+from repro.analysis.lint.cli import run_lint
+
+__all__ = ["Baseline", "Finding", "Report", "run_lint"]

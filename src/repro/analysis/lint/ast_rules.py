@@ -1,0 +1,388 @@
+"""Layer 1: AST rules over ``src/repro`` (plain ``ast``, no imports).
+
+These encode the Python-side hazards this engine has actually hit (see
+ISSUE/CHANGES history), scoped tightly enough to run with **zero false
+positives** on the tree:
+
+``traced-cast``
+    ``float()/int()/bool()`` applied to a value flowing from scheme
+    state or jit arguments. Casting a tracer forces a host transfer and
+    raises ``ConcretizationTypeError`` under jit — the PR-5
+    ``float(theta["rank"])`` bug class. Shape/static accesses
+    (``x.shape``, ``x.ndim``, ``x.size``, ``x.dtype``) are exempt:
+    shapes are static under jit.
+
+``np-in-jit``
+    a ``np.*``/``numpy.*`` call whose arguments reference a traced
+    value inside a jitted function body or scheme method. numpy eagerly
+    pulls tracers to host; ``np.prod(x.shape)``-style static uses are
+    exempt.
+
+``shape-derived-key``
+    ``jax.random.PRNGKey(seed)`` where the seed is derived from array
+    shapes. Equal-shaped arrays then share a PRNG stream (the old
+    LowRank ``PRNGKey(m·7919+n)`` bug: every same-shape matrix got the
+    same sketch). Keys must come from the engine (``item_keys``) or an
+    explicit constant seed.
+
+``mutable-default``
+    a mutable literal (``[]``/``{}``/``set()``) as a class-level default
+    on a scheme class or dataclass — shared across instances, so one
+    task's state mutation leaks into every other task using the scheme.
+
+``guard-bypass``
+    a scheme subclass that overrides ``compress`` and
+    ``kernel_dispatch_ready`` without providing ``compress_batched``:
+    it disables the MRO guard that keeps compress-overriding subclasses
+    off the batched path, so the *parent's* batched math silently runs
+    for the subclass's tasks.
+
+Scoping: "traced scope" = bodies of ``jax.jit``-decorated functions
+(minus ``static_argnames``) and the traced methods of
+``CompressionScheme`` subclasses (``init``/``compress``/
+``compress_batched``/``decompress``/``bits``/``flops``/``distortion``).
+Scheme subclasses are recognized textually per file (direct or
+transitive bases named after a known scheme class); cross-file subclass
+chains outside ``repro.core.schemes`` are invisible to this layer — the
+contract layer covers those at import time.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.lint.findings import Finding
+
+#: scheme methods whose array parameters are traced under the C step
+TRACED_METHODS = ("init", "compress", "compress_batched", "decompress",
+                  "bits", "flops", "distortion")
+#: parameters of those methods that are static/host-side by contract
+STATIC_PARAMS = {"self", "solve", "float_bits", "orig_shape", "n_items"}
+#: attribute accesses that yield static (non-traced) values under jit
+STATIC_ATTRS = {"shape", "ndim", "size", "dtype"}
+#: class names whose subclasses are treated as schemes (textual match
+#: on the last dotted component of a base expression)
+SCHEME_BASES = {"CompressionScheme"}
+
+SUPPRESS_TOKEN = "lint: disable"
+
+
+def lint_paths(paths: list[str], repo_root: str) -> list[Finding]:
+    """Run every AST rule over ``paths`` (files or directories)."""
+    findings: list[Finding] = []
+    for path in paths:
+        if os.path.isdir(path):
+            for dirpath, _, names in sorted(os.walk(path)):
+                for name in sorted(names):
+                    if name.endswith(".py"):
+                        findings += lint_file(
+                            os.path.join(dirpath, name), repo_root)
+        elif path.endswith(".py"):
+            findings += lint_file(path, repo_root)
+    return findings
+
+
+def lint_file(path: str, repo_root: str) -> list[Finding]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    rel = os.path.relpath(os.path.abspath(path), repo_root)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("syntax-error", rel, "<module>",
+                        f"file does not parse: {e}", e.lineno or 0)]
+    return _FileLinter(tree, source, rel).run()
+
+
+# ----------------------------------------------------------------------
+def _base_names(cls: ast.ClassDef) -> set[str]:
+    out = set()
+    for b in cls.bases:
+        if isinstance(b, ast.Name):
+            out.add(b.id)
+        elif isinstance(b, ast.Attribute):
+            out.add(b.attr)
+    return out
+
+
+def _is_jit_decorator(dec: ast.expr) -> tuple[bool, set[str]]:
+    """(is a jit decorator, static_argnames it declares).
+
+    Matches ``@jax.jit``, ``@jit``, ``@partial(jax.jit, ...)`` and
+    ``@jax.jit(...)`` forms.
+    """
+    def names_of(call: ast.Call) -> set[str]:
+        static: set[str] = set()
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                for node in ast.walk(kw.value):
+                    if isinstance(node, ast.Constant) \
+                            and isinstance(node.value, str):
+                        static.add(node.value)
+        return static
+
+    def is_jit_ref(node: ast.expr) -> bool:
+        return (isinstance(node, ast.Name) and node.id == "jit") or \
+            (isinstance(node, ast.Attribute) and node.attr == "jit")
+
+    if is_jit_ref(dec):
+        return True, set()
+    if isinstance(dec, ast.Call):
+        if is_jit_ref(dec.func):          # @jax.jit(...)
+            return True, names_of(dec)
+        if (isinstance(dec.func, (ast.Name, ast.Attribute))
+                and (getattr(dec.func, "id", None) == "partial"
+                     or getattr(dec.func, "attr", None) == "partial")
+                and dec.args and is_jit_ref(dec.args[0])):
+            return True, names_of(dec)    # @partial(jax.jit, ...)
+    return False, set()
+
+
+class _FileLinter:
+    def __init__(self, tree: ast.Module, source: str, rel: str):
+        self.tree = tree
+        self.lines = source.splitlines()
+        self.rel = rel
+        self.findings: list[Finding] = []
+        self.parents: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        # numpy import aliases in this module ("np", "numpy", ...)
+        self.np_aliases = {
+            a.asname or a.name
+            for node in ast.walk(tree) if isinstance(node, ast.Import)
+            for a in node.names if a.name == "numpy"}
+        # scheme classes: transitive closure of known bases, per file
+        self.scheme_classes: set[str] = set()
+        known = set(SCHEME_BASES)
+        classes = [n for n in ast.walk(tree)
+                   if isinstance(n, ast.ClassDef)]
+        changed = True
+        while changed:
+            changed = False
+            for cls in classes:
+                if cls.name not in known and _base_names(cls) & known:
+                    known.add(cls.name)
+                    self.scheme_classes.add(cls.name)
+                    changed = True
+
+    # ------------------------------------------------------------------
+    def run(self) -> list[Finding]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.ClassDef):
+                if node.name in self.scheme_classes:
+                    self._check_scheme_class(node)
+                if node.name in self.scheme_classes or \
+                        self._is_dataclass(node):
+                    self._check_mutable_defaults(node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._check_function(node)
+        return self.findings
+
+    def _emit(self, rule: str, node: ast.AST, context: str, message: str):
+        line = getattr(node, "lineno", 0)
+        if 0 < line <= len(self.lines):
+            text = self.lines[line - 1]
+            if SUPPRESS_TOKEN in text:
+                tail = text.split(SUPPRESS_TOKEN, 1)[1]
+                if "=" not in tail or rule in tail:
+                    return
+        self.findings.append(
+            Finding(rule, self.rel, context, message, line))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _is_dataclass(cls: ast.ClassDef) -> bool:
+        for dec in cls.decorator_list:
+            name = getattr(dec, "id", None) or getattr(dec, "attr", None)
+            if name is None and isinstance(dec, ast.Call):
+                name = getattr(dec.func, "id", None) \
+                    or getattr(dec.func, "attr", None)
+            if name == "dataclass":
+                return True
+        return False
+
+    def _check_mutable_defaults(self, cls: ast.ClassDef):
+        for stmt in cls.body:
+            value = None
+            if isinstance(stmt, ast.Assign):
+                value = stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                value = stmt.value
+            if value is None:
+                continue
+            bad = isinstance(value, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(value, ast.Call)
+                and isinstance(value.func, ast.Name)
+                and value.func.id in ("list", "dict", "set")
+                and not value.args and not value.keywords)
+            if bad:
+                self._emit(
+                    "mutable-default", stmt, cls.name,
+                    "mutable class-level default is shared across every "
+                    "instance (one task's mutation leaks into all tasks "
+                    "using this scheme); use dataclasses.field("
+                    "default_factory=...) or set it in __init__")
+
+    # ------------------------------------------------------------------
+    def _check_scheme_class(self, cls: ast.ClassDef):
+        methods = {n.name: n for n in cls.body
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        if ("compress" in methods and "kernel_dispatch_ready" in methods
+                and "compress_batched" not in methods):
+            self._emit(
+                "guard-bypass", methods["kernel_dispatch_ready"], cls.name,
+                "overrides compress() and kernel_dispatch_ready() without "
+                "compress_batched(): this disables the MRO guard and lets "
+                "the parent's batched solver silently run the parent's "
+                "math for this subclass's tasks; either implement "
+                "compress_batched or drop the kernel_dispatch_ready "
+                "override")
+        for name, fn in methods.items():
+            if name in TRACED_METHODS:
+                traced = {a.arg for a in (fn.args.args
+                                          + fn.args.kwonlyargs)
+                          if a.arg not in STATIC_PARAMS}
+                self._check_traced_scope(fn, traced,
+                                         f"{cls.name}.{name}")
+
+    def _check_function(self, fn):
+        is_jit, static = False, set()
+        for dec in fn.decorator_list:
+            j, s = _is_jit_decorator(dec)
+            if j:
+                is_jit, static = True, s
+                break
+        context = fn.name
+        parent = self.parents.get(fn)
+        if isinstance(parent, ast.ClassDef):
+            context = f"{parent.name}.{fn.name}"
+            if parent.name in self.scheme_classes and not is_jit:
+                if fn.name in TRACED_METHODS:
+                    return  # fully handled by _check_scheme_class
+                self._check_prng_keys(fn, context)
+                return
+        if is_jit:
+            traced = {a.arg for a in (fn.args.args + fn.args.kwonlyargs)
+                      if a.arg != "self" and a.arg not in static}
+            self._check_traced_scope(fn, traced, context)
+        else:
+            self._check_prng_keys(fn, context)
+
+    # ------------------------------------------------------------------
+    def _local_flow(self, fn, traced: set[str]) -> tuple[set[str],
+                                                         set[str]]:
+        """One forward pass over assignments: propagate tracedness and
+        collect shape-derived locals.
+
+        ``x = theta["u"]`` makes ``x`` traced; ``m, n = w.shape`` (or
+        ``m = w.shape[0]``) makes ``m``/``n`` *shape-derived* — static
+        under jit but a PRNG-seed hazard.
+        """
+        traced = set(traced)
+        shape_derived: set[str] = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            value_traced = self._references_traced(node.value, traced)
+            value_shapey = self._references_shape(node.value,
+                                                  shape_derived)
+            for tgt in node.targets:
+                names = [n.id for n in ast.walk(tgt)
+                         if isinstance(n, ast.Name)]
+                for n in names:
+                    if value_traced:
+                        traced.add(n)
+                    elif value_shapey:
+                        shape_derived.add(n)
+        return traced, shape_derived
+
+    def _references_traced(self, node: ast.expr, traced: set[str]) -> bool:
+        """Does ``node`` read a traced name *as data* (not through a
+        static ``.shape``-style access)?"""
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and n.id in traced:
+                if not self._under_static_attr(n, stop=node):
+                    return True
+        return False
+
+    @staticmethod
+    def _references_shape(node: ast.expr, shape_derived: set[str]) -> bool:
+        for n in ast.walk(node):
+            if isinstance(n, ast.Attribute) and n.attr in ("shape",):
+                return True
+            if isinstance(n, ast.Name) and n.id in shape_derived:
+                return True
+        return False
+
+    def _under_static_attr(self, name: ast.Name, stop: ast.expr) -> bool:
+        """True when the path from ``name`` up to ``stop`` passes
+        through ``<...>.shape``/``ndim``/``size``/``dtype`` — the value
+        consumed is static metadata, not the traced array."""
+        node: ast.AST = name
+        while node is not stop:
+            parent = self.parents.get(node)
+            if parent is None:
+                break
+            if isinstance(parent, ast.Attribute) \
+                    and parent.value is node \
+                    and parent.attr in STATIC_ATTRS:
+                return True
+            node = parent
+        return False
+
+    # ------------------------------------------------------------------
+    def _check_traced_scope(self, fn, params: set[str], context: str):
+        traced, shape_derived = self._local_flow(fn, params)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            # float()/int()/bool() on a traced value
+            if isinstance(func, ast.Name) \
+                    and func.id in ("float", "int", "bool") \
+                    and node.args \
+                    and self._references_traced(node.args[0], traced):
+                self._emit(
+                    "traced-cast", node, context,
+                    f"{func.id}() applied to a traced value "
+                    f"({ast.unparse(node.args[0])}): under jit this "
+                    "raises ConcretizationTypeError (and outside jit it "
+                    "forces a device sync); keep it as a jnp scalar — "
+                    "plain arithmetic works for both traced and host "
+                    "values (the PR-5 float(theta[\"rank\"]) bug class)")
+            # np.* call consuming a traced value
+            if isinstance(func, ast.Attribute) \
+                    and isinstance(func.value, ast.Name) \
+                    and func.value.id in (self.np_aliases or {"np"}):
+                args = list(node.args) + [k.value for k in node.keywords]
+                if any(self._references_traced(a, traced) for a in args):
+                    self._emit(
+                        "np-in-jit", node, context,
+                        f"numpy call np.{func.attr}(...) consumes a "
+                        "traced value inside a jitted scope: numpy "
+                        "pulls tracers to host (ConcretizationTypeError "
+                        "under jit); use the jnp equivalent")
+        self._check_prng_keys(fn, context, shape_derived)
+
+    def _check_prng_keys(self, fn, context: str,
+                         shape_derived: set[str] | None = None):
+        if shape_derived is None:
+            _, shape_derived = self._local_flow(fn, set())
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            func = node.func
+            name = getattr(func, "attr", None) or getattr(func, "id", None)
+            if name != "PRNGKey":
+                continue
+            if self._references_shape(node.args[0], shape_derived):
+                self._emit(
+                    "shape-derived-key", node, context,
+                    "PRNG key seeded from an array shape: every "
+                    "equal-shaped array shares the stream (the old "
+                    "LowRank PRNGKey(m*7919+n) sketch-collision bug); "
+                    "derive keys from the engine's per-item "
+                    "CompressionTask.item_keys, or an explicit constant "
+                    "seed")

@@ -1,0 +1,156 @@
+"""``python -m repro.analysis.lint`` — run the three-layer linter.
+
+Exit status is the contract CI relies on: 0 when every finding is
+covered by the committed baseline (``lint_baseline.json`` at the repo
+root), 1 when any *new* finding exists, 2 when the linter itself broke.
+
+Layers (``--layers``):
+
+========  ============================================================
+ast       plain-AST rules over the source tree (no imports)
+contract  scheme/registry declaration checks (imports, no compute)
+hlo       lower every registered solver + scheme family C step, run
+          the HLO rules (tracing only, no solves execute)
+trace     run 2 tiny LC boundaries and count retraces (executes a few
+          KB-sized solves; the only layer that computes anything)
+========  ============================================================
+
+Typical invocations::
+
+    python -m repro.analysis.lint                       # full run
+    python -m repro.analysis.lint --layers ast,contract # fast subset
+    python -m repro.analysis.lint --json report.json    # CI artifact
+    python -m repro.analysis.lint --write-baseline      # accept current
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.lint.findings import Baseline, Report
+
+ALL_LAYERS = ("ast", "contract", "hlo", "trace")
+
+
+def repo_root() -> str:
+    """Repo root = parent of the ``src`` directory holding ``repro``."""
+    import repro
+    # namespace package: no __file__, use __path__
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    return os.path.dirname(src)
+
+
+def _trace_findings():
+    """The CLI's default retrace probe: two boundaries of a toy 2-task
+    LC setup (tiny arrays — this is the only layer that executes)."""
+    import jax.numpy as jnp
+
+    from repro.analysis.lint.trace_count import check_retraces
+    from repro.core.algorithm import LCAlgorithm
+    from repro.core.schemes.prune import ConstraintL0Pruning
+    from repro.core.schemes.quantize import AdaptiveQuantization
+    from repro.core.tasks import CompressionTask
+    from repro.core.views import AsStacked
+
+    params = {
+        "qa": jnp.linspace(-1.0, 1.0, 32).reshape(2, 16),
+        "pb": jnp.linspace(1.0, -1.0, 32).reshape(2, 16),
+    }
+    tasks = [
+        CompressionTask("lint/quant", "qa", AsStacked("vector"),
+                        AdaptiveQuantization(k=2, iters=2)),
+        CompressionTask("lint/prune", "pb", AsStacked("vector"),
+                        ConstraintL0Pruning(kappa=8)),
+    ]
+    algo = LCAlgorithm(tasks, mu_schedule=[1e-3, 1e-2])
+    lc = algo.init(params)
+    return check_retraces(algo, params, lc, boundaries=2)
+
+
+def run_lint(paths=None, layers=ALL_LAYERS, root=None) -> Report:
+    """Run the requested layers and return the raw (pre-baseline)
+    report. ``paths`` feeds the AST layer only (default:
+    ``src/repro``)."""
+    root = root or repo_root()
+    report = Report()
+    if "ast" in layers:
+        from repro.analysis.lint.ast_rules import lint_paths
+        targets = paths or [os.path.join(root, "src", "repro")]
+        report.extend(lint_paths(targets, root), "ast")
+    if "contract" in layers:
+        from repro.analysis.lint.contract import check_schemes
+        report.extend(check_schemes(), "contract")
+    if "hlo" in layers:
+        from repro.analysis.lint.hlo_rules import (
+            check_scheme_lowerings, check_solvers)
+        report.extend(check_solvers(), "hlo")
+        report.extend(check_scheme_lowerings(), "hlo")
+    if "trace" in layers:
+        report.extend(_trace_findings(), "trace")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Three-layer static analysis for the LC engine "
+                    "(AST / scheme-registry contract / lowered HLO).")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories for the AST layer "
+                         "(default: src/repro)")
+    ap.add_argument("--layers", default=",".join(ALL_LAYERS),
+                    help="comma-separated subset of: "
+                         + ", ".join(ALL_LAYERS))
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="FILE",
+                    help="emit the JSON report to FILE (or stdout)")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="suppression baseline "
+                         "(default: <repo>/lint_baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current findings into the "
+                         "baseline and exit 0")
+    args = ap.parse_args(argv)
+
+    layers = tuple(l.strip() for l in args.layers.split(",") if l.strip())
+    bad = [l for l in layers if l not in ALL_LAYERS]
+    if bad:
+        ap.error(f"unknown layer(s) {bad}; choose from {ALL_LAYERS}")
+
+    root = repo_root()
+    baseline_path = args.baseline or os.path.join(root,
+                                                  "lint_baseline.json")
+    report = run_lint(args.paths or None, layers, root)
+
+    if args.write_baseline:
+        Baseline.write(baseline_path, report.findings)
+        print(f"wrote {len(report.findings)} suppression(s) to "
+              f"{baseline_path}")
+        return 0
+
+    report.apply_baseline(Baseline.load(baseline_path))
+
+    if args.json is not None:
+        payload = json.dumps(report.to_json(), indent=2)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w", encoding="utf-8") as f:
+                f.write(payload + "\n")
+
+    for f in report.findings:
+        print(f.format())
+    n_new, n_sup = len(report.findings), len(report.suppressed)
+    tail = f" ({n_sup} baseline-suppressed)" if n_sup else ""
+    if n_new:
+        print(f"lint: {n_new} new finding(s){tail} "
+              f"[layers: {', '.join(layers)}]")
+        return 1
+    print(f"lint: clean{tail} [layers: {', '.join(layers)}]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

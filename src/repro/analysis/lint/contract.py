@@ -1,0 +1,258 @@
+"""Layer 2: the scheme/registry contract, machine-checked.
+
+PR 4/5 grew an informal contract between schemes and the kernel
+dispatch registry (``solver`` / ``batch_operands`` / ``wants_key`` /
+``gspmd_safe`` / the honest-fallback backend rules). Nothing enforced
+it. This layer imports the registry and every ``CompressionScheme``
+subclass and verifies the *declarations* — no solve is executed.
+
+Rules:
+
+``unregistered-solver``
+    a scheme declares ``solver = "name"`` but the registry has no
+    ``jnp`` implementation for it — the group would silently fall back
+    to the vmap path forever (the backend-gap rule needs a jnp anchor).
+
+``operand-mismatch``
+    ``solver_operands`` (+ the implicit trailing ``"keys"`` when
+    ``wants_key``) disagrees with the registered solver's positional
+    signature, or its length disagrees with what ``batch_operands``
+    actually produces — the packed operand arrays would bind to the
+    wrong solver parameters.
+
+``pallas-no-interpret``
+    a solver registers a ``pallas`` backend without an ``interpret``
+    one: an explicit ``"pallas"`` request off-TPU then has no honest
+    fallback and hits the backend-gap jnp rule, silently switching
+    algorithms (the exact thing ``resolve_backend`` promises not to do).
+
+``solver-without-group-key``
+    a scheme declares a solver while ``group_key()`` is ``None`` — the
+    documented escape hatch opts out of kernel dispatch entirely, so
+    the declaration is dead and misleading.
+
+``solver-no-compress-batched``
+    a scheme declares a solver but never implements
+    ``compress_batched`` — ``kernel_dispatch_ready`` keeps it on the
+    vmap path, so again the declaration is dead.
+
+``init-key-missing``
+    a scheme's ``init`` reads hyperparameter attributes that neither
+    ``compress`` nor ``group_key`` read, without overriding
+    ``init_key()``: ``grouped_init`` would merge tasks whose Θ^DC
+    differ and solve the group with ``group[0]``'s init settings.
+
+``no-contract-example``
+    a scheme class provides no :meth:`contract_examples` instance, so
+    layers 2/3 cannot check it — implement the classmethod (informational
+    but reported: uncovered schemes are how contracts rot).
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import inspect
+import pkgutil
+import textwrap
+
+from repro.analysis.lint.findings import Finding
+
+#: packages walked to discover CompressionScheme subclasses
+SCHEME_PACKAGES = ("repro.core.schemes",)
+
+
+def _rel_file(cls) -> str:
+    """Repo-relative source path of a class (stable baseline identity)."""
+    import os
+
+    import repro
+    try:
+        f = inspect.getsourcefile(cls)
+    except TypeError:
+        f = None
+    if not f:
+        return cls.__module__
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    root = os.path.dirname(src)
+    try:
+        rel = os.path.relpath(os.path.abspath(f), root)
+    except ValueError:
+        return f
+    return f if rel.startswith("..") else rel
+
+
+def discover_scheme_classes(packages=SCHEME_PACKAGES) -> list[type]:
+    """Import every module under ``packages`` and return the
+    CompressionScheme subclasses *defined there* (transitively walked,
+    then filtered by module — live ``__subclasses__`` also sees test
+    fixtures and REPL experiments), deterministic order."""
+    from repro.core.schemes.base import CompressionScheme
+
+    for pkg_name in packages:
+        pkg = importlib.import_module(pkg_name)
+        for info in pkgutil.iter_modules(pkg.__path__):
+            importlib.import_module(f"{pkg_name}.{info.name}")
+
+    prefixes = tuple(p + "." for p in packages) + tuple(packages)
+    out, stack = [], [CompressionScheme]
+    while stack:
+        cls = stack.pop()
+        for sub in cls.__subclasses__():
+            if sub.__module__.startswith(prefixes):
+                out.append(sub)
+            stack.append(sub)
+    return sorted(set(out), key=lambda c: (c.__module__, c.__name__))
+
+
+def _self_attr_reads(fn, cls) -> set[str]:
+    """Names of non-method ``self.X`` attribute loads in ``fn``'s body."""
+    try:
+        src = textwrap.dedent(inspect.getsource(fn))
+        tree = ast.parse(src)
+    except (OSError, TypeError, SyntaxError):
+        return set()
+    reads = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "self" \
+                and not callable(getattr(cls, node.attr, None)):
+            reads.add(node.attr)
+    return reads
+
+
+def _provider(cls, name):
+    for c in cls.__mro__:
+        if name in c.__dict__:
+            return c
+    return None
+
+
+def check_schemes(classes=None, registry=None) -> list[Finding]:
+    """Run every contract rule. ``classes``/``registry`` default to the
+    discovered scheme classes and the live dispatch registry (tests pass
+    explicit ones)."""
+    from repro.core.schemes.base import CompressionScheme
+    from repro.kernels import dispatch
+
+    if classes is None:
+        classes = discover_scheme_classes()
+    if registry is None:
+        registry = dispatch.registry_entries()
+
+    findings: list[Finding] = []
+
+    # --- registry-wide: honest-fallback rule -------------------------
+    for solver, impls in sorted(registry.items()):
+        if "pallas" in impls and "interpret" not in impls:
+            findings.append(Finding(
+                "pallas-no-interpret", "registry", solver,
+                "solver registers a pallas backend without an interpret "
+                "one: an explicit pallas request off-TPU then silently "
+                "switches to the jnp algorithm via the backend-gap rule "
+                "instead of emulating the kernel; register the same "
+                "kernel with interpret=True", layer="contract"))
+
+    # --- per-class rules ---------------------------------------------
+    for cls in classes:
+        if cls is CompressionScheme:
+            continue
+        rel = _rel_file(cls)
+        examples = cls.contract_examples()
+        if not examples:
+            findings.append(Finding(
+                "no-contract-example", rel, cls.__name__,
+                "contract_examples() returns no instance, so the "
+                "contract and HLO layers cannot cover this scheme; "
+                "override the classmethod with one cheap instance",
+                layer="contract"))
+
+        # inherited declarations are checked on the declaring class
+        solver = cls.__dict__.get("solver", None)
+        if solver is not None:
+            impls = registry.get(solver, {})
+            if "jnp" not in impls:
+                findings.append(Finding(
+                    "unregistered-solver", rel, cls.__name__,
+                    f"declared solver {solver!r} has no registered jnp "
+                    "backend — kernel dispatch will silently fall back "
+                    "to the vmap path for every group of this scheme; "
+                    "register a jnp implementation or drop the "
+                    "declaration", layer="contract"))
+            if _provider(cls, "compress_batched") is CompressionScheme:
+                findings.append(Finding(
+                    "solver-no-compress-batched", rel, cls.__name__,
+                    f"declares solver {solver!r} but never implements "
+                    "compress_batched(); kernel_dispatch_ready() keeps "
+                    "it on the vmap path, so the declaration is dead",
+                    layer="contract"))
+
+            sig = dispatch.solver_signature(solver) \
+                if "jnp" in registry.get(solver, {}) else None
+            declared = tuple(cls.solver_operands)
+            if cls.wants_key:
+                declared = declared + ("keys",)
+            if sig is not None:
+                missing = [n for n in declared if n not in sig]
+                if missing:
+                    findings.append(Finding(
+                        "operand-mismatch", rel, cls.__name__,
+                        f"solver_operands names {missing} are not "
+                        f"positional parameters of the registered "
+                        f"{solver!r} jnp solver (signature: "
+                        f"{list(sig)}); the packed operand arrays "
+                        "would bind to the wrong parameters",
+                        layer="contract"))
+            for ex in examples:
+                try:
+                    n_ops = len(ex.batch_operands(2))
+                except Exception:
+                    continue
+                n_decl = n_ops if not cls.wants_key else n_ops + 1
+                if ex.batch_key() is not None \
+                        and len(declared) != n_decl:
+                    findings.append(Finding(
+                        "operand-mismatch", rel, cls.__name__,
+                        f"solver_operands declares {len(declared)} "
+                        f"name(s) {list(declared)} but batch_operands() "
+                        f"produces {n_ops} array(s)"
+                        + (" plus the engine-appended keys operand"
+                           if cls.wants_key else "")
+                        + "; declare one name per operand, in solver-"
+                        "signature order", layer="contract"))
+                    break
+
+            for ex in examples:
+                if ex.group_key() is None:
+                    findings.append(Finding(
+                        "solver-without-group-key", rel, cls.__name__,
+                        f"declares solver {solver!r} but group_key() is "
+                        "None (the documented fully-custom escape "
+                        "hatch), which opts out of kernel dispatch — "
+                        "the declaration is dead; drop it or implement "
+                        "group_key", layer="contract"))
+                    break
+
+        # --- init-only hyperparameters must extend init_key ----------
+        init_fn = cls.__dict__.get("init")
+        if init_fn is not None and _provider(cls, "init_key") is \
+                CompressionScheme:
+            init_reads = _self_attr_reads(init_fn, cls)
+            other = set()
+            for name in ("compress", "group_key", "batch_key",
+                         "batch_operands"):
+                fn = _provider(cls, name)
+                if fn is not None and fn is not CompressionScheme:
+                    other |= _self_attr_reads(fn.__dict__[name], cls)
+            init_only = init_reads - other
+            if init_only:
+                findings.append(Finding(
+                    "init-key-missing", rel, cls.__name__,
+                    f"init() reads hyperparameters {sorted(init_only)} "
+                    "that compress()/group_key() never read, but "
+                    "init_key() is not overridden: grouped_init would "
+                    "merge tasks whose direct compression differs and "
+                    "solve them with group[0]'s settings; extend "
+                    "init_key() with these hyperparameters",
+                    layer="contract"))
+    return findings

@@ -1,0 +1,224 @@
+"""Layer 3: rules over *lowered HLO* — what the compiler will actually
+see, checked without executing anything.
+
+Two sweeps, both feeding the same rule set:
+
+* every registered ``(solver, backend)`` dispatch entry is lowered on
+  representative packed shapes (``jax.jit(...).lower`` on
+  ``ShapeDtypeStruct``s);
+* every scheme family's grouped C step is lowered through
+  ``core.grouping.lower_group`` — the same packing/solve/shard code the
+  engine jits, so the analyzed program IS the production program.
+
+The HLO text (``lowered.compiler_ir(dialect="hlo").as_hlo_text()``) is
+parsed with the existing ``analysis/hlo_stats.parse_module`` and
+checked for:
+
+``gspmd-unsafe-custom-call``
+    a LAPACK/linalg custom-call reachable from a scheme that claims
+    ``gspmd_safe=True`` while kernel-dispatch-ready — the exact PR-2
+    miscompile shape: GSPMD has no partitioning rule for these targets
+    and silently miscompiles sliced uses under plain sharding.
+
+``donation-unaliased``
+    a donated input the compiler could not alias into any output
+    (detected via the lowering-time "donated buffers were not usable"
+    warning): the engine donates Θ/λ buffers expecting in-place reuse,
+    so an unusable donation is a silent 2× liveness regression.
+
+``f64-op``
+    f64/c128 ops in the lowered module — a Python float or np.float64
+    upcast leaking into the trace (doubles bandwidth, and TPUs emulate
+    f64 at ~1/10 throughput).
+
+``host-callback``
+    ``pure_callback``/``io_callback``-style custom-call targets — a
+    host synchronization point inside the C step that also blocks
+    sharding.
+
+``lower-failed``
+    the entry/scheme would not lower at all on its representative
+    shapes — whatever the exception says is broken before any of the
+    above can even be asked.
+
+Lowering never runs a solve; the sweep is pure tracing and takes
+seconds. Compiled-``pallas`` entries are skipped off-TPU (Mosaic cannot
+lower them there); their ``interpret`` twins cover the kernel body.
+"""
+from __future__ import annotations
+
+import warnings
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo_stats
+from repro.analysis.lint.findings import Finding
+
+_DONATION_MARKER = "donated buffers were not usable"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def solver_fixture(name: str):
+    """Representative packed inputs ``(args, static_kwargs)`` for a
+    registered solver name, or None for names this sweep cannot cover
+    (user-registered solvers should extend the scheme-level sweep via
+    ``contract_examples`` instead)."""
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    n = 4
+    table = {
+        "kmeans_lloyd": ((_sds((n, 64), f32), _sds((n, 4), f32),
+                          _sds((n,), i32)), {"iters": 2}),
+        "topk_mask": ((_sds((n, 64), f32), _sds((n,), i32)), {}),
+        "project_l1_ball": ((_sds((n, 64), f32), _sds((n,), f32)), {}),
+        "soft_threshold": ((_sds((n, 64), f32), _sds((n,), f32),
+                            _sds((), f32)), {}),
+        "lowrank_rsvd": ((_sds((n, 12, 8), f32), _sds((n,), i32),
+                          _sds((n, 2), u32)), {"r_max": 3}),
+        "rank_select": ((_sds((n, 12, 8), f32), _sds((n,), f32),
+                         _sds((n, 2), u32), _sds((), f32)),
+                        {"r_max": 3}),
+    }
+    return table.get(name)
+
+
+def _hlo_text(lowered) -> str:
+    return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+
+
+def _module_findings(hlo_text: str, file: str, context: str,
+                     gspmd_claimed: bool = False) -> list[Finding]:
+    """The shared per-module rule set (see module docstring)."""
+    comps = hlo_stats.parse_module(hlo_text)
+    findings = []
+    linalg = hlo_stats.linalg_custom_calls(comps)
+    if gspmd_claimed and linalg:
+        findings.append(Finding(
+            "gspmd-unsafe-custom-call", file, context,
+            f"gspmd_safe=True but the lowered C step contains linalg "
+            f"custom-call(s) {linalg}: GSPMD has no partitioning rule "
+            "for these and miscompiles sliced uses under plain "
+            "sharding (the PR-2 bug) — either make the batched solver "
+            "matmul-only or drop the gspmd_safe claim so the shard_map "
+            "workaround applies", layer="hlo"))
+    for target in hlo_stats.host_callbacks(comps):
+        findings.append(Finding(
+            "host-callback", file, context,
+            f"lowered module calls host callback {target!r}: a host "
+            "round-trip inside the C step serializes the device and "
+            "blocks sharding; compute it in-graph or hoist it out of "
+            "the jitted step", layer="hlo"))
+    f64 = hlo_stats.f64_ops(comps)
+    if f64:
+        findings.append(Finding(
+            "f64-op", file, context,
+            f"lowered module contains {len(f64)} f64/c128 op(s) (e.g. "
+            f"{f64[:3]}): a Python float or np.float64 is upcasting "
+            "the trace — cast to jnp.float32 at the boundary",
+            layer="hlo"))
+    return findings
+
+
+def check_solvers(registry=None) -> list[Finding]:
+    """Lower every registered (solver, backend) entry and run the
+    module rules. The registry is the live dispatch table by default."""
+    from repro.kernels import dispatch
+
+    if registry is None:
+        registry = dispatch.registry_entries()
+    on_tpu = jax.default_backend() == "tpu"
+    findings = []
+    for solver, impls in sorted(registry.items()):
+        fixture = solver_fixture(solver)
+        if fixture is None:
+            continue
+        args, kwargs = fixture
+        for backend, fn in sorted(impls.items()):
+            if backend == "pallas" and not on_tpu:
+                continue  # Mosaic cannot lower off-TPU; interpret covers it
+            context = f"{solver}:{backend}"
+            try:
+                lowered = jax.jit(partial(fn, **kwargs)).lower(*args)
+                text = _hlo_text(lowered)
+            except Exception as e:  # noqa: BLE001 — reported, not raised
+                findings.append(Finding(
+                    "lower-failed", "registry", context,
+                    f"registered solver failed to lower on "
+                    f"representative shapes: {type(e).__name__}: {e}",
+                    layer="hlo"))
+                continue
+            findings += _module_findings(text, "registry", context)
+    return findings
+
+
+# ----------------------------------------------------------------------
+def representative_group(scheme, n_tasks: int = 2, n_items: int = 2):
+    """Build a toy multi-task group + abstract inputs for one scheme
+    instance: ``(group, xs, thetas)`` ready for ``lower_group``. Vector
+    schemes get ``(n_items, 64)`` stacks, matrix schemes
+    ``(n_items, 12, 8)`` — nothing is materialized (xs are
+    ShapeDtypeStructs, thetas come from ``jax.eval_shape``)."""
+    from repro.core.tasks import CompressionTask
+    from repro.core.views import AsStacked
+
+    item = (12, 8) if scheme.domain == "matrix" else (64,)
+    group, xs, thetas = [], {}, {}
+    for i in range(n_tasks):
+        name = f"lint/{type(scheme).__name__}/{i}"
+        t = CompressionTask(name, pattern=".",
+                            view=AsStacked(scheme.domain), scheme=scheme)
+        x = _sds((n_items,) + item, jnp.float32)
+        group.append(t)
+        xs[name] = x
+        thetas[name] = jax.eval_shape(t.scheme_init, x)
+    return group, xs, thetas
+
+
+def check_scheme_lowerings(classes=None,
+                           backend: str | None = "auto") -> list[Finding]:
+    """Lower each scheme family's grouped C step (via
+    ``core.grouping.lower_group``, Θ donated like the engine's) and run
+    the module rules + the donation-aliasing check."""
+    from repro.analysis.lint.contract import _rel_file, \
+        discover_scheme_classes
+    from repro.core.grouping import lower_group
+
+    if classes is None:
+        classes = discover_scheme_classes()
+    findings = []
+    for cls in classes:
+        for i, ex in enumerate(cls.contract_examples()):
+            context = f"{cls.__name__}[{i}]"
+            rel = _rel_file(cls)
+            try:
+                group, xs, thetas = representative_group(ex)
+                with warnings.catch_warnings(record=True) as caught:
+                    warnings.simplefilter("always")
+                    lowered = lower_group(group, xs, thetas, mu=1.0,
+                                          backend=backend, donate=True)
+                    text = _hlo_text(lowered)
+            except Exception as e:  # noqa: BLE001 — reported, not raised
+                findings.append(Finding(
+                    "lower-failed", rel, context,
+                    f"grouped C step failed to lower on representative "
+                    f"shapes: {type(e).__name__}: {e}", layer="hlo"))
+                continue
+            donation = [str(w.message) for w in caught
+                        if _DONATION_MARKER in str(w.message)]
+            if donation:
+                findings.append(Finding(
+                    "donation-unaliased", rel, context,
+                    "donated Θ input could not be aliased into any "
+                    "output — the engine's donate path would silently "
+                    "hold both buffers live (2× Θ memory): keep the new "
+                    "Θ's leaf shapes/dtypes equal to the old Θ's "
+                    f"(compiler said: {donation[0][:200]})", layer="hlo"))
+            gspmd_claimed = bool(ex.gspmd_safe
+                                 and ex.kernel_dispatch_ready())
+            findings += _module_findings(text, rel, context,
+                                         gspmd_claimed=gspmd_claimed)
+    return findings

@@ -1,0 +1,81 @@
+"""Retrace detection for LC boundaries (Layer 3's dynamic half).
+
+Every LC boundary runs the same jitted ``c_step``/``multiplier_step``
+on identically-shaped state, so each should compile **exactly once** —
+a retrace between identical boundaries means something non-hashable or
+shape-unstable leaked into the trace (a Python float μ that changes
+identity, a re-created mesh, a Θ whose shapes drift), and every
+boundary silently pays seconds of compile time instead of
+microseconds of dispatch.
+
+The counter instruments an ``LCAlgorithm`` *instance*: the unjitted
+step impls are shadowed with counting wrappers (instance attributes win
+over bound methods) and ``_build_steps()`` re-wraps them in jit — after
+which each jit cache miss calls the wrapped Python impl exactly once,
+so the counter equals the number of traces.
+"""
+from __future__ import annotations
+
+from repro.analysis.lint.findings import Finding
+
+
+def instrument(algo) -> dict:
+    """Attach trace counters to an LCAlgorithm; returns the live
+    counter dict {"c_step": n, "multiplier_step": n}. Must be called
+    before the first step (it rebuilds the jit wrappers, dropping any
+    cached executables)."""
+    counters = {"c_step": 0, "multiplier_step": 0}
+    orig_c = algo._c_step_impl
+    orig_m = algo._multiplier_step_impl
+
+    def counting_c(params, lc):
+        counters["c_step"] += 1
+        return orig_c(params, lc)
+
+    def counting_m(params, lc):
+        counters["multiplier_step"] += 1
+        return orig_m(params, lc)
+
+    algo._c_step_impl = counting_c
+    algo._multiplier_step_impl = counting_m
+    algo._build_steps()
+    return counters
+
+
+def run_boundaries(algo, params, lc, boundaries: int = 2,
+                   overlap: bool = False) -> dict:
+    """Run ``boundaries`` identical LC boundaries (C step + multiplier
+    step at the schedule's first μ) through an *instrumented* algo and
+    return the final counter values. ``overlap=True`` exercises the
+    async (non-donating) entry points the overlapped trainer uses."""
+    counters = instrument(algo)
+    mu = float(algo.mu_schedule[0])
+    for k in range(boundaries):
+        lc = algo.set_mu(lc, mu, k)
+        if overlap:
+            lc = algo.c_step_async(params, lc)
+            lc = algo.multiplier_step_async(params, lc)
+        else:
+            lc = algo.c_step(params, lc)
+            lc = algo.multiplier_step(params, lc)
+    return dict(counters)
+
+
+def check_retraces(algo, params, lc, boundaries: int = 2,
+                   context: str = "lc-boundaries",
+                   overlap: bool = False) -> list[Finding]:
+    """``boundary-retrace`` findings for any step that traced more than
+    once across ``boundaries`` identical boundaries."""
+    counts = run_boundaries(algo, params, lc, boundaries,
+                            overlap=overlap)
+    findings = []
+    for step, n in sorted(counts.items()):
+        if n > 1:
+            findings.append(Finding(
+                "boundary-retrace", "algorithm", f"{context}:{step}",
+                f"{step} traced {n}× across {boundaries} identical LC "
+                "boundaries (expected 1): something non-hashable or "
+                "shape-unstable is leaking into the jit cache key — "
+                "check that μ enters as a traced scalar (set_mu) and "
+                "that Θ/λ shapes are boundary-stable", layer="hlo"))
+    return findings

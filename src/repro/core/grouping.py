@@ -279,6 +279,97 @@ def _group_operands(group: Sequence[CompressionTask], counts: list[int]):
     return operands
 
 
+def _group_solve(scheme, solver_fn, mu):
+    """The packed-group solve callable — one body shared by the
+    executing path (:func:`grouped_compress`) and the lowering path
+    (:func:`lower_group`), so what the linter inspects is exactly what
+    the C step runs. ``solve(items, packed_theta, *operands) →
+    (new_theta, decompressed items)``."""
+    def _solve(xi, ti, *ops):
+        if solver_fn is not None:
+            nt = scheme.compress_batched(solver_fn, xi, ti, ops, mu=mu)
+        elif scheme.wants_key:
+            (keys,) = ops
+            nt = jax.vmap(
+                lambda x, th, k: scheme.compress(x, th, mu=mu,
+                                                 key=k))(xi, ti, keys)
+        else:
+            nt = jax.vmap(
+                lambda x, th: scheme.compress(x, th, mu=mu))(xi, ti)
+        return nt, jax.vmap(scheme.decompress)(nt)
+
+    return _solve
+
+
+def _pack_group(group: Sequence[CompressionTask], xs: dict, thetas: dict,
+                counts: list[int], solver_fn):
+    """Build the packed array tuple a group solve consumes.
+
+    Returns ``(arrays, thetas_lead)``: ``arrays`` is ``(items,
+    packed_theta, *operands)`` and ``thetas_lead`` the per-task Θs with
+    a leading item axis (the slice-back templates). Pure tracing code —
+    runs concretely inside the jitted C step and abstractly under
+    ``jax.eval_shape`` when lowering."""
+    scheme = group[0].scheme
+    items = jnp.concatenate(
+        [t.view.to_items(xs[t.name]) for t in group], axis=0)
+    thetas_lead = [thetas[t.name] if t.view.stacked
+                   else add_leading_axis(thetas[t.name])
+                   for t in group]
+    if solver_fn is not None:
+        # batched solvers take Θ leaves padded to the group max
+        # trailing shape (mixed-rank factors → R_max, mixed-K
+        # codebooks → K_max); the vmap path never mixes shapes
+        # (they are part of its grouping identity)
+        packed = pack_thetas_padded(thetas_lead)
+        operands = _group_operands(group, counts)
+    else:
+        packed = pack_thetas(thetas_lead)
+        operands = ((_packed_keys(group, counts),)
+                    if scheme.wants_key else ())
+    return (items, packed) + operands, thetas_lead
+
+
+def lower_group(group: Sequence[CompressionTask], xs: dict, thetas: dict,
+                mu: float = 1.0, mesh: Mesh | None = None,
+                rules: dict | None = None, backend: str | None = None,
+                donate: bool = False):
+    """Lower one group's packed C solve to HLO **without executing it**.
+
+    The static-analysis hook behind ``repro.analysis.lint``'s HLO layer:
+    it stages exactly the program :func:`grouped_compress` would run for
+    ``group`` — same packing, same solver resolution, same
+    mesh/shard-mode logic — through ``jax.jit(...).lower`` on
+    ``ShapeDtypeStruct``s, and returns the ``Lowered`` object (use
+    ``.as_text()`` / ``.compiler_ir(dialect="hlo")``).
+
+    ``xs``/``thetas`` may hold real arrays or ``ShapeDtypeStruct``s —
+    nothing is materialized either way. ``donate=True`` marks the packed
+    Θ input donated, mirroring the engine's donated LC state, so a
+    donation-aliasing check sees the engine's buffer story. A singleton
+    group lowers the same packed program with one item.
+    """
+    scheme = group[0].scheme
+    solver_fn, _ = _task_solver(scheme, backend)
+    counts = [t.view.item_count(xs[t.name]) for t in group]
+    n_items = sum(counts)
+
+    arrays = jax.eval_shape(
+        lambda xs_, thetas_: _pack_group(group, xs_, thetas_, counts,
+                                         solver_fn)[0],
+        xs, {t.name: thetas[t.name] for t in group})
+
+    solve = _group_solve(scheme, solver_fn, mu)
+    gspmd = solver_fn is not None and scheme.gspmd_safe
+
+    def run(items, packed, *ops):
+        return _run_group_solve(solve, (items, packed) + ops, n_items,
+                                mesh, rules, gspmd=gspmd)
+
+    jitted = jax.jit(run, donate_argnums=(1,) if donate else ())
+    return jitted.lower(*arrays)
+
+
 def solve_task(task: CompressionTask, x, theta, mu,
                backend: str | None = None):
     """One task's C solve, kernel-dispatched when the scheme opts in.
@@ -336,40 +427,12 @@ def grouped_compress(tasks: Sequence[CompressionTask], xs: dict,
         solver_fn, _ = _task_solver(scheme, backend)
         counts = [t.view.item_count(xs[t.name]) for t in group]
         n_items = sum(counts)
-        items = jnp.concatenate(
-            [t.view.to_items(xs[t.name]) for t in group], axis=0)
-        thetas_lead = [thetas[t.name] if t.view.stacked
-                       else add_leading_axis(thetas[t.name])
-                       for t in group]
-        if solver_fn is not None:
-            # batched solvers take Θ leaves padded to the group max
-            # trailing shape (mixed-rank factors → R_max, mixed-K
-            # codebooks → K_max); the vmap path never mixes shapes
-            # (they are part of its grouping identity)
-            packed = pack_thetas_padded(thetas_lead)
-            operands = _group_operands(group, counts)
-        else:
-            packed = pack_thetas(thetas_lead)
-            operands = ((_packed_keys(group, counts),)
-                        if scheme.wants_key else ())
-
-        def _solve(xi, ti, *ops, scheme=scheme, solver_fn=solver_fn):
-            if solver_fn is not None:
-                nt = scheme.compress_batched(solver_fn, xi, ti, ops,
-                                             mu=mu)
-            elif scheme.wants_key:
-                (keys,) = ops
-                nt = jax.vmap(
-                    lambda x, th, k: scheme.compress(x, th, mu=mu,
-                                                     key=k))(xi, ti, keys)
-            else:
-                nt = jax.vmap(
-                    lambda x, th: scheme.compress(x, th, mu=mu))(xi, ti)
-            return nt, jax.vmap(scheme.decompress)(nt)
+        arrays, thetas_lead = _pack_group(group, xs, thetas, counts,
+                                          solver_fn)
 
         new_packed, a_packed = _run_group_solve(
-            _solve, (items, packed) + operands, n_items, mesh, rules,
-            gspmd=solver_fn is not None and scheme.gspmd_safe)
+            _group_solve(scheme, solver_fn, mu), arrays, n_items, mesh,
+            rules, gspmd=solver_fn is not None and scheme.gspmd_safe)
 
         theta_parts = unpack_thetas(new_packed, counts)
         if solver_fn is not None:

@@ -26,6 +26,15 @@ class AdditiveCombination(CompressionScheme):
         self.domain = ("matrix" if any(s.domain == "matrix" for s in schemes)
                        else "vector")
 
+    @classmethod
+    def contract_examples(cls):
+        # imports live here, not at module top: base-class machinery
+        # must not pull sibling scheme modules into an import cycle
+        from repro.core.schemes.prune import ConstraintL0Pruning
+        from repro.core.schemes.quantize import AdaptiveQuantization
+        return (cls([AdaptiveQuantization(k=2, iters=2),
+                     ConstraintL0Pruning(kappa=4)], iters=2),)
+
     def group_key(self):
         subs = tuple(s.group_key() for s in self.schemes)
         if any(k is None for k in subs):

@@ -58,6 +58,16 @@ class CompressionScheme:
     #: dispatch path; the vmap fallback always keeps the workaround.
     gspmd_safe: bool = False
 
+    #: machine-readable half of the solver calling convention: the
+    #: parameter names, in order, that this scheme's
+    #: :meth:`batch_operands` arrays bind to in the registered solver's
+    #: signature (``repro.kernels.dispatch.solver_signature``). The
+    #: engine never reads this — it exists so the lint contract layer
+    #: can verify the declaration against the registry without running
+    #: anything (``wants_key`` adds an implicit trailing ``"keys"``).
+    #: A scheme with a ``solver`` must name one entry per operand.
+    solver_operands: tuple[str, ...] = ()
+
     def init(self, w: jnp.ndarray, key=None) -> Theta:
         """Direct compression Θ^DC = Π(w) used to initialize the LC loop."""
         raise NotImplementedError
@@ -187,6 +197,27 @@ class CompressionScheme:
         cp, cbp = provider("compress"), provider("compress_batched")
         return (cbp is not None and cbp is not CompressionScheme
                 and cp is not None and issubclass(cbp, cp))
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def contract_examples(cls) -> tuple["CompressionScheme", ...]:
+        """Representative *instances* for static tooling.
+
+        The lint contract layer (``repro.analysis.lint``) instantiates
+        each scheme class to read its declared contract
+        (``group_key``/``batch_key``/``batch_operands``/``init_key``)
+        and to lower its grouped C step on toy shapes — without a real
+        model. Subclasses with required constructor arguments override
+        this with one or more cheap instances (small hyperparameters:
+        lowering cost, not fidelity, is what matters); the default
+        covers no-arg constructors and returns ``()`` when the class
+        cannot be built bare (such a class is skipped, and the linter
+        reports it as uncovered).
+        """
+        try:
+            return (cls(),)
+        except TypeError:
+            return ()
 
     # ------------------------------------------------------------------
     def distortion(self, w: jnp.ndarray, theta: Theta) -> jnp.ndarray:

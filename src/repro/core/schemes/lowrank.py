@@ -73,6 +73,7 @@ class LowRank(CompressionScheme):
     # tasks differing only in target rank pack into ONE group/launch
     # with factors padded to the group R_max (pack_thetas_padded).
     solver = "lowrank_rsvd"
+    solver_operands = ("rank",)
     wants_key = True       # per-item sketch keys from the C-step engine
     gspmd_safe = True      # no LAPACK custom call in the batched solver
 
@@ -80,6 +81,10 @@ class LowRank(CompressionScheme):
         assert target_rank >= 1
         self.rank = int(target_rank)
         self.randomized = randomized
+
+    @classmethod
+    def contract_examples(cls):
+        return (cls(target_rank=2),)
 
     def group_key(self):
         # `randomized="auto"` resolves per item shape, but grouped items
@@ -159,8 +164,15 @@ class RankSelection(CompressionScheme):
     # operand so tasks differing only in α pack into ONE group/launch.
     # Engages only when max_rank bounds the sketch (see batch_key).
     solver = "rank_select"
+    solver_operands = ("alpha",)
     wants_key = True
     gspmd_safe = True
+
+    @classmethod
+    def contract_examples(cls):
+        # max_rank bounds the sketch so the batched solver engages; the
+        # unbounded variant covers the exact-spectrum vmap path
+        return (cls(alpha=1e-3, max_rank=3), cls(alpha=1e-3))
 
     def __init__(self, alpha: float, cost: str = "storage",
                  max_rank: int | None = None):

@@ -64,10 +64,15 @@ class ConstraintL0Pruning(CompressionScheme):
     # κ pack into ONE kernel launch (mixed-κ grouping) — under the
     # vmap path they can't group at all, κ being baked into the trace.
     solver = "topk_mask"
+    solver_operands = ("kappa",)
 
     def __init__(self, kappa: int):
         assert kappa >= 1
         self.kappa = int(kappa)
+
+    @classmethod
+    def contract_examples(cls):
+        return (cls(kappa=4),)
 
     def group_key(self):
         return ("prune-l0", self.kappa)
@@ -105,9 +110,14 @@ class ConstraintL1Pruning(CompressionScheme):
     # "Solver coverage"); the ball radius κ rides as a traced per-item
     # operand, so tasks differing only in κ share one launch.
     solver = "project_l1_ball"
+    solver_operands = ("radius",)
 
     def __init__(self, kappa: float):
         self.kappa = float(kappa)
+
+    @classmethod
+    def contract_examples(cls):
+        return (cls(kappa=1.0),)
 
     def group_key(self):
         return ("prune-l1", self.kappa)
@@ -148,6 +158,10 @@ class PenaltyL0Pruning(CompressionScheme):
     def __init__(self, alpha: float):
         self.alpha = float(alpha)
 
+    @classmethod
+    def contract_examples(cls):
+        return (cls(alpha=1e-3),)
+
     def group_key(self):
         return ("prune-penalty-l0", self.alpha)
 
@@ -179,9 +193,14 @@ class PenaltyL1Pruning(CompressionScheme):
     # batched prox in the dispatch registry; α rides as a traced
     # per-item operand, so mixed-α penalty tasks share one launch.
     solver = "soft_threshold"
+    solver_operands = ("alpha",)
 
     def __init__(self, alpha: float):
         self.alpha = float(alpha)
+
+    @classmethod
+    def contract_examples(cls):
+        return (cls(alpha=1e-3),)
 
     def group_key(self):
         return ("prune-penalty-l1", self.alpha)

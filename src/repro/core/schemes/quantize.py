@@ -105,6 +105,7 @@ class AdaptiveQuantization(CompressionScheme):
     # of vmapping kmeans_1d (see kernels/dispatch.py; the jnp backend is
     # bit-identical to the vmap path)
     solver = "kmeans_lloyd"
+    solver_operands = ("kvalid",)
 
     def __init__(self, k: int = 2, iters: int = 25, use_dp_init: bool = False,
                  dp_bins: int = 2048):
@@ -128,6 +129,11 @@ class AdaptiveQuantization(CompressionScheme):
 
     def batch_operands(self, n_items: int):
         return (jnp.full((n_items,), self.k, jnp.int32),)
+
+    @classmethod
+    def contract_examples(cls):
+        # tiny iters: the lint HLO layer lowers this, it never runs it
+        return (cls(k=2, iters=2),)
 
     def init_key(self):
         # the DP warm start only changes init(), not compress(): keep it

@@ -130,6 +130,44 @@ def solver_table() -> dict[str, tuple[str, ...]]:
             sorted(_REGISTRY.items())}
 
 
+def registry_entries() -> dict[str, dict[str, Callable]]:
+    """Shallow copy of the raw registry: {solver: {backend: impl}}.
+
+    Metadata accessor for tooling (``repro.analysis.lint`` contract
+    layer) — callers must treat the inner callables as opaque; use
+    :func:`lookup` for dispatch so the honest-fallback rules apply.
+    """
+    return {name: dict(impls) for name, impls in _REGISTRY.items()}
+
+
+def solver_signature(solver: str,
+                     backend: str = "jnp") -> tuple[str, ...] | None:
+    """Positional parameter names of a registered solver implementation
+    (keyword-only config like ``iters``/``r_max`` excluded), unwrapping
+    ``functools.partial``. ``None`` when the (solver, backend) entry is
+    missing or the underlying callable is not introspectable.
+
+    This is the machine-readable half of the calling conventions in the
+    module docstring — the lint contract layer checks each scheme's
+    declared ``solver_operands`` against it.
+    """
+    import inspect
+
+    impls = _REGISTRY.get(solver, {})
+    fn = impls.get(backend)
+    if fn is None:
+        return None
+    while isinstance(fn, partial):
+        fn = fn.func
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return None
+    return tuple(
+        p.name for p in sig.parameters.values()
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD))
+
+
 # ----------------------------------------------------------------------
 # built-in solvers (import at the bottom: ops modules must exist before
 # registration, and this module must define lookup() before core code

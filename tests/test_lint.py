@@ -1,0 +1,367 @@
+"""The linter linted: every rule must trip on its deliberately-broken
+fixture — and only that rule — with a message that says what to do.
+
+Layer 1 fixtures are source strings written to tmp_path (the AST pass
+never imports); layer 2/3 fixtures are real classes/registries passed
+explicitly. The seeded-regression checks from the issue are mirrored
+here: re-introducing the PR-5 ``float(θ["rank"])`` bug and a
+bare-GSPMD LAPACK custom-call must both fail the CLI, naming the
+file and rule.
+"""
+import json
+import re
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.lint import Baseline, Finding, Report
+from repro.analysis.lint.ast_rules import lint_file, lint_paths
+from repro.analysis.lint.cli import main as lint_main, repo_root
+from repro.analysis.lint.contract import check_schemes
+from repro.analysis.lint.hlo_rules import (check_scheme_lowerings,
+                                           check_solvers)
+from repro.core.schemes.base import CompressionScheme
+from repro.core.schemes.lowrank import LowRank
+from repro.core.schemes.prune import ConstraintL0Pruning
+
+
+# ----------------------------------------------------------------------
+# Layer 1: AST fixtures
+# ----------------------------------------------------------------------
+def _lint_source(tmp_path, source: str):
+    f = tmp_path / "fixture.py"
+    f.write_text(source)
+    return lint_file(str(f), str(tmp_path))
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+SCHEME_HEADER = """\
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro.core.schemes.base import CompressionScheme
+"""
+
+
+def test_traced_cast_fixture_trips_exactly_that_rule(tmp_path):
+    findings = _lint_source(tmp_path, SCHEME_HEADER + """
+class F(CompressionScheme):
+    def compress(self, w, theta, mu=None):
+        r = float(theta["rank"])
+        return {"theta": w * r}
+""")
+    assert _rules(findings) == ["traced-cast"]
+    (f,) = findings
+    assert f.context == "F.compress"
+    assert "ConcretizationTypeError" in f.message
+    assert "jnp scalar" in f.message  # actionable: what to do instead
+
+
+def test_np_in_jit_fixture(tmp_path):
+    findings = _lint_source(tmp_path, SCHEME_HEADER + """
+@jax.jit
+def step(x):
+    return np.mean(x) + 1.0
+""")
+    assert _rules(findings) == ["np-in-jit"]
+    assert "jnp equivalent" in findings[0].message
+
+
+def test_shape_derived_key_fixture(tmp_path):
+    findings = _lint_source(tmp_path, SCHEME_HEADER + """
+class F(CompressionScheme):
+    def compress(self, w, theta, mu=None):
+        m, n = w.shape
+        key = jax.random.PRNGKey(m * 7919 + n)
+        return {"theta": w + jax.random.normal(key, w.shape)}
+""")
+    assert _rules(findings) == ["shape-derived-key"]
+    assert "item_keys" in findings[0].message
+
+
+def test_mutable_default_fixture(tmp_path):
+    findings = _lint_source(tmp_path, SCHEME_HEADER + """
+class F(CompressionScheme):
+    cache = {}
+""")
+    assert _rules(findings) == ["mutable-default"]
+    assert "default_factory" in findings[0].message
+
+
+def test_guard_bypass_fixture(tmp_path):
+    findings = _lint_source(tmp_path, SCHEME_HEADER + """
+class F(CompressionScheme):
+    solver = "topk_mask"
+
+    def compress(self, w, theta, mu=None):
+        return {"theta": w}
+
+    def kernel_dispatch_ready(self):
+        return True
+""")
+    assert _rules(findings) == ["guard-bypass"]
+    assert "compress_batched" in findings[0].message
+
+
+def test_static_shape_accesses_are_exempt(tmp_path):
+    # the PR-5 *fix* shape: float() over .shape-derived values is fine
+    findings = _lint_source(tmp_path, SCHEME_HEADER + """
+class F(CompressionScheme):
+    def bits(self, theta, float_bits: int = 32):
+        m = theta["u"].shape[0]
+        n = theta["v"].shape[0]
+        return theta["rank"] * float((m + n) * float_bits)
+
+@jax.jit
+def g(x):
+    return float(x.shape[0]) + int(x.ndim) + jnp.sum(x)
+""")
+    assert findings == []
+
+
+def test_inline_suppression_comment(tmp_path):
+    findings = _lint_source(tmp_path, SCHEME_HEADER + """
+class F(CompressionScheme):
+    def compress(self, w, theta, mu=None):
+        r = float(theta["r"])  # lint: disable=traced-cast
+        s = float(theta["s"])  # lint: disable=np-in-jit (wrong rule)
+        return {"theta": w * r * s}
+""")
+    # the matching disable silences line 1; the wrong-rule one does not
+    assert _rules(findings) == ["traced-cast"]
+    assert len(findings) == 1
+
+
+def test_lint_paths_walks_directories(tmp_path):
+    (tmp_path / "pkg").mkdir()
+    (tmp_path / "pkg" / "a.py").write_text(
+        SCHEME_HEADER + "class A(CompressionScheme):\n    cache = []\n")
+    (tmp_path / "pkg" / "b.py").write_text("x = 1\n")
+    findings = lint_paths([str(tmp_path / "pkg")], str(tmp_path))
+    assert [f.rule for f in findings] == ["mutable-default"]
+    assert findings[0].file == "pkg/a.py"
+
+
+# ----------------------------------------------------------------------
+# Layer 2: contract fixtures (explicit classes/registry)
+# ----------------------------------------------------------------------
+def test_pallas_without_interpret_registration(tmp_path):
+    registry = {"mysolver": {"jnp": lambda w, kappa: w,
+                             "pallas": lambda w, kappa: w}}
+    findings = check_schemes(classes=[], registry=registry)
+    assert _rules(findings) == ["pallas-no-interpret"]
+    assert findings[0].context == "mysolver"
+    assert "interpret=True" in findings[0].message
+
+
+def test_unregistered_solver():
+    class Ghost(ConstraintL0Pruning):
+        solver = "no_such_solver"
+
+        def compress_batched(self, solve, w, theta, operands, mu=None):
+            return {"theta": w}
+
+        @classmethod
+        def contract_examples(cls):
+            return (cls(kappa=2),)
+
+    findings = check_schemes(classes=[Ghost], registry={})
+    assert _rules(findings) == ["unregistered-solver"]
+    assert "no_such_solver" in findings[0].message
+
+
+def test_operand_name_mismatch():
+    class WrongName(ConstraintL0Pruning):
+        solver = "topk_mask"
+        solver_operands = ("k_items",)  # solver's param is "kappa"
+
+        @classmethod
+        def contract_examples(cls):
+            return (cls(kappa=2),)
+
+    findings = check_schemes(classes=[WrongName])
+    assert _rules(findings) == ["operand-mismatch"]
+    assert "k_items" in findings[0].message
+
+
+def test_operand_count_mismatch():
+    class TooMany(ConstraintL0Pruning):
+        solver = "topk_mask"
+        solver_operands = ("kappa", "iters")  # batch_operands yields 1
+
+        @classmethod
+        def contract_examples(cls):
+            return (cls(kappa=2),)
+
+    findings = check_schemes(classes=[TooMany])
+    assert _rules(findings) == ["operand-mismatch"]
+
+
+def test_solver_without_compress_batched():
+    class Declared(CompressionScheme):
+        solver = "topk_mask"
+
+        def group_key(self):
+            return ("declared",)
+
+        @classmethod
+        def contract_examples(cls):
+            return (cls(),)
+
+    findings = check_schemes(classes=[Declared])
+    assert _rules(findings) == ["solver-no-compress-batched"]
+
+
+def test_solver_with_group_key_none():
+    class Exotic(CompressionScheme):
+        solver = "topk_mask"
+
+        def compress_batched(self, solve, w, theta, operands, mu=None):
+            return theta
+
+        @classmethod
+        def contract_examples(cls):
+            return (cls(),)
+
+    findings = check_schemes(classes=[Exotic])
+    assert _rules(findings) == ["solver-without-group-key"]
+
+
+def test_init_only_hyperparam_without_init_key():
+    class DPStart(ConstraintL0Pruning):
+        def __init__(self, kappa, warm_bins=64):
+            super().__init__(kappa)
+            self.warm_bins = warm_bins
+
+        def init(self, w, key=None):
+            b = self.warm_bins  # init-only hyperparameter
+            return {"theta": w * 0.0 + b * 0}
+
+        @classmethod
+        def contract_examples(cls):
+            return (cls(kappa=2),)
+
+    findings = check_schemes(classes=[DPStart])
+    assert _rules(findings) == ["init-key-missing"]
+    assert "warm_bins" in findings[0].message
+
+
+def test_current_tree_contract_is_clean():
+    assert check_schemes() == []
+
+
+# ----------------------------------------------------------------------
+# Layer 3: lowered-HLO fixtures
+# ----------------------------------------------------------------------
+class BadGspmdLowRank(LowRank):
+    """Claims gspmd_safe but its batched solve calls the LAPACK SVD —
+    the exact PR-2 miscompile shape."""
+
+    def compress_batched(self, solve, w, theta, operands, mu=None):
+        u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+        r = theta["u"].shape[-1]
+        rs = jnp.sqrt(s[..., :r])
+        return {"u": u[..., :, :r] * rs[..., None, :],
+                "v": jnp.swapaxes(vt, -1, -2)[..., :, :r]
+                * rs[..., None, :]}
+
+    @classmethod
+    def contract_examples(cls):
+        return (cls(target_rank=2),)
+
+
+def test_gspmd_safe_claim_with_lapack_custom_call():
+    findings = check_scheme_lowerings(classes=[BadGspmdLowRank])
+    assert _rules(findings) == ["gspmd-unsafe-custom-call"]
+    (f,) = findings
+    assert "lapack" in f.message.lower()
+    assert "shard_map" in f.message  # actionable remediation
+
+
+class ShapeChangingScheme(ConstraintL0Pruning):
+    """Consumes the donated Θ but returns a different-shaped Θ, so the
+    donation can never alias."""
+
+    def compress_batched(self, solve, w, theta, operands, mu=None):
+        half = theta["theta"][..., : theta["theta"].shape[-1] // 2]
+        return {"theta": half * 2.0}
+
+    @classmethod
+    def contract_examples(cls):
+        return (cls(kappa=2),)
+
+
+def test_donation_violation_detected():
+    findings = check_scheme_lowerings(classes=[ShapeChangingScheme])
+    assert "donation-unaliased" in _rules(findings)
+    f = next(f for f in findings if f.rule == "donation-unaliased")
+    assert "2× Θ memory" in f.message or "shapes" in f.message
+
+
+def test_current_solver_registry_lowers_clean():
+    assert check_solvers() == []
+
+
+# ----------------------------------------------------------------------
+# Seeded regressions through the CLI (issue acceptance criteria)
+# ----------------------------------------------------------------------
+def test_seeded_pr5_float_rank_bug_fails_cli(tmp_path, capsys):
+    src = (repo_root() + "/src/repro/core/schemes/lowrank.py")
+    bugged = re.sub(
+        r'return theta\["rank"\] \*',
+        'return float(theta["rank"]) *',
+        open(src).read())
+    assert 'float(theta["rank"])' in bugged  # the seed applied
+    bad = tmp_path / "lowrank_bugged.py"
+    bad.write_text(bugged)
+
+    rc = lint_main([str(bad), "--layers", "ast",
+                    "--baseline", str(tmp_path / "empty.json")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "[traced-cast]" in out
+    assert "lowrank_bugged.py" in out
+
+
+def test_clean_tree_passes_cli_ast_contract(capsys):
+    rc = lint_main(["--layers", "ast,contract"])
+    assert rc == 0
+    assert "lint: clean" in capsys.readouterr().out
+
+
+# ----------------------------------------------------------------------
+# Baseline / report plumbing
+# ----------------------------------------------------------------------
+def test_baseline_suppresses_by_rule_file_context(tmp_path):
+    f1 = Finding("traced-cast", "a.py", "F.compress", "msg", 10)
+    f2 = Finding("np-in-jit", "a.py", "F.compress", "msg", 11)
+    Baseline.write(str(tmp_path / "b.json"), [f1])
+    report = Report(findings=[f1, f2])
+    report.apply_baseline(Baseline.load(str(tmp_path / "b.json")))
+    # line-insensitive identity: same (rule, file, context) suppresses
+    assert [f.rule for f in report.findings] == ["np-in-jit"]
+    assert [f.rule for f in report.suppressed] == ["traced-cast"]
+
+
+def test_json_report_shape(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    rc = lint_main(["--layers", "ast", "--json", str(out)])
+    assert rc == 0
+    data = json.loads(out.read_text())
+    assert data["version"] == 1
+    assert data["layers"] == ["ast"]
+    assert data["counts"] == {"new": 0, "suppressed": 0}
+
+
+def test_committed_baseline_has_zero_suppressions():
+    data = json.loads(
+        open(repo_root() + "/lint_baseline.json").read())
+    assert data["suppressions"] == []
+
+
+def test_unknown_layer_rejected():
+    with pytest.raises(SystemExit):
+        lint_main(["--layers", "nope"])

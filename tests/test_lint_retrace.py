@@ -1,0 +1,160 @@
+"""Retrace-count regression for the overlapped trainer path.
+
+Every LC boundary reruns the same jitted ``c_step``/``multiplier_step``
+on identically-shaped state, so each must compile exactly once no
+matter how many boundaries run. The overlapped trainer
+(``overlap="on"``) is the path most at risk: it drives the async entry
+points and re-syncs penalty refs at every μ change, so anything
+non-hashable leaking into those calls (a Python-float μ, a rebuilt
+mesh, Θ shape drift) turns each boundary into a fresh multi-second
+compile. Layer 3's trace counter is the detector; this file pins the
+trainer to it.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.lint.trace_count import (check_retraces, instrument,
+                                             run_boundaries)
+from repro.configs import get_config, reduced_config
+from repro.core import (AsVector, CompressionTask, LCAlgorithm,
+                        exponential_mu_schedule)
+from repro.core.schemes import AdaptiveQuantization
+from repro.core.schemes.prune import ConstraintL0Pruning
+from repro.core.tasks import CompressionTask as Task
+from repro.core.views import AsStacked
+from repro.data import TokenStream
+from repro.runtime import LCTrainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = reduced_config(get_config("phi3-mini-3.8b")).with_(pattern_reps=1)
+
+
+def _make_overlapped_trainer(n_mu=3, steps_per_l=2):
+    data = TokenStream(CFG.vocab_size, 2, 16)
+    lc = LCAlgorithm(
+        [CompressionTask("qg", r"stages/.*/w_gate$", AsVector(),
+                         AdaptiveQuantization(k=2, iters=5)),
+         CompressionTask("qu", r"stages/.*/w_up$", AsVector(),
+                         AdaptiveQuantization(k=2, iters=5))],
+        exponential_mu_schedule(1e-4, 1.5, n_mu))
+    tcfg = TrainerConfig(steps_per_l=steps_per_l, overlap="on", lr=3e-4)
+    return LCTrainer(CFG, lc, data, tcfg=tcfg)
+
+
+def _toy_algo():
+    params = {
+        "qa": jnp.linspace(-1.0, 1.0, 32).reshape(2, 16),
+        "pb": jnp.linspace(1.0, -1.0, 32).reshape(2, 16),
+    }
+    tasks = [
+        Task("lint/quant", "qa", AsStacked("vector"),
+             AdaptiveQuantization(k=2, iters=2)),
+        Task("lint/prune", "pb", AsStacked("vector"),
+             ConstraintL0Pruning(kappa=8)),
+    ]
+    algo = LCAlgorithm(tasks, mu_schedule=[1e-3, 1e-2, 1e-1])
+    return algo, params, algo.init(params)
+
+
+# ----------------------------------------------------------------------
+# The satellite: overlapped trainer, 3 boundaries, one compile each
+# ----------------------------------------------------------------------
+def test_overlapped_trainer_compiles_each_step_once_across_3_boundaries():
+    trainer = _make_overlapped_trainer(n_mu=3)
+    counters = instrument(trainer.lc)
+    trainer.run(KEY)
+    assert counters["c_step"] == 1, (
+        f"c_step traced {counters['c_step']}× across 3 overlapped LC "
+        "boundaries — every boundary is paying compile time")
+    assert counters["multiplier_step"] == 1, (
+        f"multiplier_step traced {counters['multiplier_step']}× across "
+        "3 overlapped LC boundaries")
+
+
+def test_async_entry_points_share_the_sync_compile_cache():
+    # On CPU donate="auto" resolves to off, so the async entry points
+    # must be the *same* executables — mixing sync and async calls
+    # across boundaries still compiles once.
+    algo, params, lc = _toy_algo()
+    counters = instrument(algo)
+    mu = float(algo.mu_schedule[0])
+    for k in range(3):
+        lc = algo.set_mu(lc, mu, k)
+        if k % 2 == 0:
+            lc = algo.c_step_async(params, lc)
+            lc = algo.multiplier_step_async(params, lc)
+        else:
+            lc = algo.c_step(params, lc)
+            lc = algo.multiplier_step(params, lc)
+    assert counters == {"c_step": 1, "multiplier_step": 1}
+
+
+def test_run_boundaries_overlap_counts_once_and_flags_nothing():
+    algo, params, lc = _toy_algo()
+    counts = run_boundaries(algo, params, lc, boundaries=3, overlap=True)
+    assert counts == {"c_step": 1, "multiplier_step": 1}
+
+    algo, params, lc = _toy_algo()
+    assert check_retraces(algo, params, lc, boundaries=3,
+                          overlap=True) == []
+
+
+# ----------------------------------------------------------------------
+# Positive control: the counter must actually catch the bug class
+# ----------------------------------------------------------------------
+class _RejittingAlgo:
+    """Faithful stub of the bug class: rebuilds the jit wrappers at
+    every μ change (e.g. calling ``_build_steps``/``set_mesh`` per
+    boundary), so every boundary is a cache miss."""
+
+    mu_schedule = [0.1, 0.2]
+
+    def __init__(self):
+        self._build_steps()
+
+    def _c_step_impl(self, params, lc):
+        return jax.tree_util.tree_map(lambda x: x * 2.0, lc)
+
+    def _multiplier_step_impl(self, params, lc):
+        return jax.tree_util.tree_map(lambda x: x + 1.0, lc)
+
+    def _build_steps(self):
+        # fresh closures → fresh jit cache keys (jitting the *same*
+        # function object twice would still hit jax's global cache)
+        impl_c, impl_m = self._c_step_impl, self._multiplier_step_impl
+        self._c_jit = jax.jit(lambda params, lc: impl_c(params, lc))
+        self._m_jit = jax.jit(lambda params, lc: impl_m(params, lc))
+
+    def set_mu(self, lc, mu, k):
+        self._build_steps()  # the bug: rebuilt closures every boundary
+        return lc
+
+    def c_step(self, params, lc):
+        return self._c_jit(params, lc)
+
+    def multiplier_step(self, params, lc):
+        return self._m_jit(params, lc)
+
+
+def test_rejitting_boundary_trips_boundary_retrace():
+    algo = _RejittingAlgo()
+    params = {"w": jnp.ones((4,))}
+    lc = {"theta": jnp.zeros((4,))}
+    findings = check_retraces(algo, params, lc, boundaries=3)
+    assert sorted(f.context for f in findings) == [
+        "lc-boundaries:c_step", "lc-boundaries:multiplier_step"]
+    for f in findings:
+        assert f.rule == "boundary-retrace"
+        assert "traced 3×" in f.message
+
+
+def test_instrument_counts_legitimate_shape_retraces():
+    # sanity: the counter is a trace counter, not a call counter —
+    # same shapes twice is one trace, a new shape is a second.
+    algo, params, lc = _toy_algo()
+    counters = instrument(algo)
+    lc = algo.set_mu(lc, 1e-3, 0)
+    algo.c_step(params, lc)
+    algo.c_step(params, lc)
+    assert counters["c_step"] == 1
