@@ -69,6 +69,33 @@ def _trace_findings():
     return check_retraces(algo, params, lc, boundaries=2)
 
 
+def _engine_trace_findings():
+    """Retrace probe for the serving engine: a tiny one-attn-layer
+    model served over a mixed-length trace; every compiled program must
+    trace exactly once."""
+    import numpy as np
+    import jax
+
+    from repro.analysis.lint.trace_count import check_engine_retraces
+    from repro.configs.base import LayerSpec, ModelConfig
+    from repro.models.transformer import init_params
+    from repro.runtime.server import Request, ServingEngine
+
+    cfg = ModelConfig(
+        name="lint-serve", d_model=16, n_heads=2, n_kv_heads=2,
+        head_dim=8, d_ff=32, vocab_size=64,
+        pattern=(LayerSpec("attn", "dense"),), pattern_reps=1,
+        attn_chunk_q=8, attn_chunk_kv=8, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params, slots=2, max_len=16,
+                           prefill_chunk=4)
+    rng = np.random.default_rng(0)
+    reqs = [Request(id=i, prompt=rng.integers(1, 64, size=s)
+                    .astype(np.int32), max_new=m, arrival=0.0)
+            for i, (s, m) in enumerate([(3, 2), (5, 3), (9, 2)])]
+    return check_engine_retraces(engine, reqs)
+
+
 def run_lint(paths=None, layers=ALL_LAYERS, root=None) -> Report:
     """Run the requested layers and return the raw (pre-baseline)
     report. ``paths`` feeds the AST layer only (default:
@@ -84,11 +111,14 @@ def run_lint(paths=None, layers=ALL_LAYERS, root=None) -> Report:
         report.extend(check_schemes(), "contract")
     if "hlo" in layers:
         from repro.analysis.lint.hlo_rules import (
-            check_scheme_lowerings, check_solvers)
+            check_scheme_lowerings, check_serving_lowerings,
+            check_solvers)
         report.extend(check_solvers(), "hlo")
         report.extend(check_scheme_lowerings(), "hlo")
+        report.extend(check_serving_lowerings(), "hlo")
     if "trace" in layers:
         report.extend(_trace_findings(), "trace")
+        report.extend(_engine_trace_findings(), "trace")
     return report
 
 

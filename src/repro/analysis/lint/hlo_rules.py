@@ -178,6 +178,66 @@ def representative_group(scheme, n_tasks: int = 2, n_items: int = 2):
     return group, xs, thetas
 
 
+def check_serving_lowerings(slots: int = 2, max_len: int = 16,
+                            prefill_chunk: int = 4) -> list[Finding]:
+    """Lower the serving engine's decode/prefill/reset programs (the
+    exact production programs, cache donated like the engine's) on a
+    tiny one-attn-layer config and run the module rules + the
+    donation-aliasing check. Pure tracing: params and cache are
+    ``eval_shape`` abstractions — nothing is allocated."""
+    from repro.configs.base import LayerSpec, ModelConfig
+    from repro.models.transformer import init_cache, init_params
+    from repro.runtime.server import engine_programs
+
+    cfg = ModelConfig(
+        name="lint-serve", d_model=16, n_heads=2, n_kv_heads=2,
+        head_dim=8, d_ff=32, vocab_size=64,
+        pattern=(LayerSpec("attn", "dense"),), pattern_reps=1,
+        attn_chunk_q=8, attn_chunk_kv=8, dtype="float32")
+    params = jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+    cache = jax.eval_shape(lambda: init_cache(cfg, slots, max_len))
+    i32, b_, key = jnp.int32, jnp.bool_, _sds((2,), jnp.uint32)
+    decode_impl, prefill_impl, reset_impl = engine_programs(
+        cfg, slots, max_len, 0.0, {"decode": 0, "prefill": 0,
+                                   "reset": 0})
+    programs = [
+        ("serving:decode", jax.jit(decode_impl, donate_argnums=(1,)),
+         (params, cache, _sds((slots,), i32), _sds((slots,), i32),
+          _sds((slots,), b_), key)),
+        ("serving:prefill", jax.jit(prefill_impl, donate_argnums=(1,)),
+         (params, cache, _sds((slots, prefill_chunk), i32),
+          _sds((slots,), i32), _sds((slots,), i32),
+          _sds((slots,), b_), key)),
+        ("serving:reset", jax.jit(reset_impl, donate_argnums=(0,)),
+         (cache, _sds((slots,), b_))),
+    ]
+    findings = []
+    for context, prog, args in programs:
+        try:
+            with warnings.catch_warnings(record=True) as caught:
+                warnings.simplefilter("always")
+                text = _hlo_text(prog.lower(*args))
+        except Exception as e:  # noqa: BLE001 — reported, not raised
+            findings.append(Finding(
+                "lower-failed", "runtime/server", context,
+                f"serving program failed to lower on representative "
+                f"shapes: {type(e).__name__}: {e}", layer="hlo"))
+            continue
+        donation = [str(w.message) for w in caught
+                    if _DONATION_MARKER in str(w.message)]
+        if donation:
+            findings.append(Finding(
+                "donation-unaliased", "runtime/server", context,
+                "donated KV-cache input could not be aliased into the "
+                "output cache — every serving tick would hold two full "
+                "caches live: keep the updated cache's leaf shapes/"
+                "dtypes identical to the input's (compiler said: "
+                f"{donation[0][:200]})", layer="hlo"))
+        findings += _module_findings(text, "runtime/server", context)
+    return findings
+
+
 def check_scheme_lowerings(classes=None,
                            backend: str | None = "auto") -> list[Finding]:
     """Lower each scheme family's grouped C step (via

@@ -61,6 +61,30 @@ def run_boundaries(algo, params, lc, boundaries: int = 2,
     return dict(counters)
 
 
+def check_engine_retraces(engine, requests,
+                          context: str = "serving-traffic"
+                          ) -> list[Finding]:
+    """``engine-retrace`` findings for a serving engine's compiled
+    programs: run a mixed-length request trace and flag any program
+    that traced more than once. The continuous-batching contract is
+    fixed signatures — slot count, chunk size, and cache shapes never
+    vary with the traffic — so each of decode/prefill/reset must
+    compile exactly once no matter how lengths and arrivals mix."""
+    engine.run(list(requests))
+    findings = []
+    for prog, n in sorted(engine.trace_counts.items()):
+        if n > 1:
+            findings.append(Finding(
+                "engine-retrace", "runtime/server", f"{context}:{prog}",
+                f"serving {prog} program traced {n}× across one "
+                "mixed-length traffic trace (expected 1): a Python "
+                "value or data-dependent shape is leaking into the jit "
+                "cache key — slot state must stay in fixed-shape "
+                "arrays (tok/pos/active), never in traced Python "
+                "scalars", layer="trace"))
+    return findings
+
+
 def check_retraces(algo, params, lc, boundaries: int = 2,
                    context: str = "lc-boundaries",
                    overlap: bool = False) -> list[Finding]:

@@ -1,0 +1,35 @@
+"""Serving op for low-rank-factored weights.
+
+After the LC low-rank C step, a weight W (K, N) of rank r is stored as
+factors U (K, r), Vᵀ (r, N). Decode is memory-bound: streaming the
+factors costs r·(K+N) weight reads instead of K·N, so for r ≪ KN/(K+N)
+the factored matmul is the roofline win — W is never materialized, in
+HBM or in the kernel.
+
+Two thin chained GEMMs lower to plain XLA dots (MXU-friendly on TPU,
+no custom call), so there is no Pallas body here — the "kernel" is the
+contraction order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lowrank_matmul(x: jnp.ndarray, u: jnp.ndarray,
+                   vt: jnp.ndarray) -> jnp.ndarray:
+    """y = x @ (u @ vt) computed as (x @ u) @ vt.
+
+    x: (..., K); u: (K, r); vt: (r, N) → y: (..., N). The parenthesized
+    order is the entire point: FLOPs and weight bytes scale with r, not
+    K·N.
+    """
+    with jax.named_scope("lowrank_matmul"):
+        h = x @ u.astype(x.dtype)
+        return h @ vt.astype(x.dtype)
+
+
+def materialize_lowrank(u: jnp.ndarray, vt: jnp.ndarray) -> jnp.ndarray:
+    """Dense W = u @ vt — for parity checks and non-matmul uses (embed
+    lookup); never on the decode hot path."""
+    return u @ vt

@@ -1,0 +1,40 @@
+"""Serving op for pruned-sparse weights.
+
+After the LC pruning C step, a weight W (K, N) keeps nnz surviving
+entries. Serving stores them COO-style as (values, rows, cols) — the
+HBM read per decode step is nnz·(2 + 4 + 4) bytes (bf16 value + two
+int32 coordinates) instead of K·N·2, a win once density drops below
+~25%. Below that cutoff callers should densify (see
+``runtime.compressed``): scatter-add beats a dense matmul only when
+the weight is actually sparse.
+
+The gather/scatter formulation (`x[:, rows] * values` scattered into
+output columns) keeps everything inside one XLA program — no host
+round-trip, no custom call — and batches over the leading x axes for
+free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_matmul(x: jnp.ndarray, values: jnp.ndarray, rows: jnp.ndarray,
+                  cols: jnp.ndarray, n_cols: int) -> jnp.ndarray:
+    """y = x @ W for W given in COO form.
+
+    x: (..., K); values: (nnz,); rows/cols: (nnz,) int32 with
+    W[rows[i], cols[i]] = values[i]; n_cols = N (static) → y: (..., N).
+    """
+    with jax.named_scope("sparse_matmul"):
+        contrib = x[..., rows] * values.astype(x.dtype)      # (..., nnz)
+        out = jnp.zeros((*x.shape[:-1], n_cols), x.dtype)
+        return out.at[..., cols].add(contrib)
+
+
+def densify(values: jnp.ndarray, rows: jnp.ndarray, cols: jnp.ndarray,
+            shape: tuple[int, int]) -> jnp.ndarray:
+    """Dense W from COO triplets — parity checks and the low-sparsity
+    fallback path."""
+    w = jnp.zeros(shape, values.dtype)
+    return w.at[rows, cols].set(values)

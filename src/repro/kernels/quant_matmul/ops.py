@@ -1,12 +1,14 @@
-"""Public wrapper: padded/tiled codebook-dequant GEMM + helpers to put a
-model's quantized weights into kernel layout."""
+"""Public wrappers: padded/tiled codebook-dequant GEMMs (uint8 and
+4-bit packed) + helpers to put a model's quantized weights into kernel
+layout."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.quant_matmul import ref
-from repro.kernels.quant_matmul.quant_matmul import quant_matmul
+from repro.kernels.quant_matmul.quant_matmul import (
+    quant_matmul, quant_matmul_packed)
 
 
 def _on_tpu() -> bool:
@@ -33,7 +35,58 @@ def matmul(x: jnp.ndarray, idx: jnp.ndarray, codebook: jnp.ndarray,
     return y[:m, :n]
 
 
+def matmul_packed(x: jnp.ndarray, packed: jnp.ndarray,
+                  codebook: jnp.ndarray, use_pallas: bool | str = "auto",
+                  **tiles) -> jnp.ndarray:
+    """y = x @ codebook[unpack4(packed)] — the 4-bit serving GEMM.
+
+    ``packed``: (ceil(K/2), N) bytes from :func:`pack4`. x: (M, K) with
+    K = 2·packed.shape[0] (pad x with a zero column for odd K before
+    packing). The x split into even/odd K-columns happens here, outside
+    the kernel, so the kernel body is two dequant-matmuls per tile with
+    no VMEM interleave.
+    """
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref.quant_matmul_packed_ref(x, packed, codebook)
+    m, k = x.shape
+    k2, n = packed.shape
+    assert k == 2 * k2, (x.shape, packed.shape)
+    x_even, x_odd = x[:, 0::2], x[:, 1::2]
+    bm = min(tiles.get("bm", 128), max(8, m))
+    bn = min(tiles.get("bn", 128), n)
+    bk2 = min(tiles.get("bk2", 256), k2)
+    pm, pn, pk2 = (-m) % bm, (-n) % bn, (-k2) % bk2
+    xe = jnp.pad(x_even, ((0, pm), (0, pk2)))
+    xo = jnp.pad(x_odd, ((0, pm), (0, pk2)))
+    pp = jnp.pad(packed, ((0, pk2), (0, pn)))
+    y = quant_matmul_packed(xe, xo, pp, codebook, bm=bm, bn=bn, bk2=bk2,
+                            interpret=not _on_tpu())
+    return y[:m, :n]
+
+
 def pack_quantized(w: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
     """Dense weight matrix → uint8 index matrix under ``codebook``."""
     mid = (codebook[1:] + codebook[:-1]) * 0.5
     return jnp.searchsorted(mid, w).astype(jnp.uint8)
+
+
+def pack4(idx: jnp.ndarray) -> jnp.ndarray:
+    """(K, N) uint8 indices (< 16) → (ceil(K/2), N) packed bytes.
+
+    Row 2r lands in the low nibble, row 2r+1 in the high nibble. Odd K
+    pads one index-0 row — harmless as long as the matching x column is
+    zero (ops-level padding guarantees this).
+    """
+    k, n = idx.shape
+    if k % 2:
+        idx = jnp.pad(idx, ((0, 1), (0, 0)))
+    lo = idx[0::2]
+    hi = idx[1::2]
+    return (lo | (hi << jnp.uint8(4))).astype(jnp.uint8)
+
+
+def unpack4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack4` (up to the odd-K pad row)."""
+    return ref.unpack4_ref(packed)

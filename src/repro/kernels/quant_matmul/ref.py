@@ -10,3 +10,19 @@ def quant_matmul_ref(x: jnp.ndarray, idx: jnp.ndarray,
     codebook: (C,) f32 → y (M, N) f32 = x @ codebook[idx]."""
     w = codebook[idx.astype(jnp.int32)]            # (K, N) f32
     return x.astype(jnp.float32) @ w
+
+
+def unpack4_ref(packed: jnp.ndarray) -> jnp.ndarray:
+    """(K/2, N) packed bytes → (K, N) uint8 indices (row 2r = low
+    nibble, row 2r+1 = high nibble)."""
+    lo = packed & jnp.uint8(0x0F)
+    hi = packed >> jnp.uint8(4)
+    k2, n = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
+
+
+def quant_matmul_packed_ref(x: jnp.ndarray, packed: jnp.ndarray,
+                            codebook: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the 4-bit path: unpack to full uint8 indices, then the
+    dense dequant matmul."""
+    return quant_matmul_ref(x, unpack4_ref(packed), codebook)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.sharding import constrain
-from repro.models.layers import apply_rope, dense_init, rms_norm, wload
+from repro.models.layers import (apply_rope, apply_w, dense_init, rms_norm,
+                                 wload)
 
 NEG_INF = -1e30
 
@@ -143,11 +144,11 @@ def attn_forward(params, x, cfg, spec, positions, return_cache=False):
     """Full-sequence attention (train / prefill). x: (B, S, d_model)."""
     b, s, _ = x.shape
     dt = x.dtype
-    q = (x @ wload(params["wq"], dt)).reshape(
+    q = apply_w(x, params["wq"], dt).reshape(
         b, s, cfg.n_heads, cfg.head_dim)
-    k = (x @ wload(params["wk"], dt)).reshape(
+    k = apply_w(x, params["wk"], dt).reshape(
         b, s, cfg.n_kv_heads, cfg.head_dim)
-    v = (x @ wload(params["wv"], dt)).reshape(
+    v = apply_w(x, params["wv"], dt).reshape(
         b, s, cfg.n_kv_heads, cfg.head_dim)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
@@ -158,7 +159,7 @@ def attn_forward(params, x, cfg, spec, positions, return_cache=False):
         q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv,
         fused=cfg.fused_attention)
     out = constrain(out, ("batch", "seq", "heads", None))
-    y = out.reshape(b, s, cfg.q_dim) @ wload(params["wo"], dt)
+    y = apply_w(out.reshape(b, s, cfg.q_dim), params["wo"], dt)
     if not return_cache:
         return y
     w = spec.window
@@ -178,7 +179,10 @@ def init_attn_cache(cfg, spec, batch: int, max_len: int, dtype) -> dict:
 
 
 def attn_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
-    """x: (B, 1, d_model); pos: scalar int32 (0-based index of new token).
+    """x: (B, 1, d_model); pos: 0-based index of the new token — scalar
+    int32 (whole batch in lockstep) or (B,) int32 (per-slot positions,
+    continuous batching: every slot writes its own ring slot and masks
+    its own validity range).
 
     ``layer_idx`` set ⇒ cache leaves are layer-stacked (L, B, len, KV, D)
     and this layer's update is a single token-sized dynamic-update-slice
@@ -188,13 +192,16 @@ def attn_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
     """
     b = x.shape[0]
     dt = x.dtype
-    q = (x @ wload(params["wq"], dt)).reshape(
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    q = apply_w(x, params["wq"], dt).reshape(
         b, 1, cfg.n_heads, cfg.head_dim)
-    k = (x @ wload(params["wk"], dt)).reshape(
+    k = apply_w(x, params["wk"], dt).reshape(
         b, 1, cfg.n_kv_heads, cfg.head_dim)
-    v = (x @ wload(params["wv"], dt)).reshape(
+    v = apply_w(x, params["wv"], dt).reshape(
         b, 1, cfg.n_kv_heads, cfg.head_dim)
-    pos_arr = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    # (1,) broadcasts over batch; (B, 1) gives each slot its own angle
+    pos_arr = pos[:, None] if per_slot else jnp.reshape(pos, (1,))
     q = apply_rope(q, pos_arr, cfg.rope_theta)
     k = apply_rope(k, pos_arr, cfg.rope_theta)
 
@@ -203,7 +210,24 @@ def attn_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
     length = k_buf.shape[2] if stacked else k_buf.shape[1]
     slot = jnp.where(spec.window > 0, pos % length,
                      jnp.minimum(pos, length - 1)).astype(jnp.int32)
-    if stacked:
+    if per_slot:
+        rows = jnp.arange(b)
+        if stacked:
+            k_buf = k_buf.at[layer_idx, rows, slot].set(
+                k[:, 0].astype(k_buf.dtype))
+            v_buf = v_buf.at[layer_idx, rows, slot].set(
+                v[:, 0].astype(v_buf.dtype))
+            with jax.named_scope("fused_flash_attention"
+                                 if cfg.fused_attention else "cache_read"):
+                k_cache = jax.lax.dynamic_index_in_dim(
+                    k_buf, layer_idx, 0, keepdims=False)
+                v_cache = jax.lax.dynamic_index_in_dim(
+                    v_buf, layer_idx, 0, keepdims=False)
+        else:
+            k_cache = k_buf.at[rows, slot].set(k[:, 0].astype(k_buf.dtype))
+            v_cache = v_buf.at[rows, slot].set(v[:, 0].astype(v_buf.dtype))
+            k_buf, v_buf = k_cache, v_cache
+    elif stacked:
         zero = jnp.int32(0)
         k_buf = jax.lax.dynamic_update_slice(
             k_buf, k[None].astype(k_buf.dtype),
@@ -233,7 +257,8 @@ def attn_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
         s = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache,
                        preferred_element_type=jnp.float32)
         s = s / np.sqrt(cfg.head_dim)
-        n_valid = jnp.minimum(pos + 1, length)
+        n_valid = jnp.minimum(pos + 1, length)      # () or (B,)
+        n_valid = n_valid[:, None, None, None] if per_slot else n_valid
         valid = jnp.arange(length)[None, None, None, :] < n_valid
         s = jnp.where(valid, s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1).astype(dt)
@@ -246,7 +271,7 @@ def attn_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
     else:
         out = _core(qh, k_cache, v_cache)
     out = out.reshape(b, 1, cfg.q_dim)
-    return out @ wload(params["wo"], dt), {"k": k_buf, "v": v_buf}
+    return apply_w(out, params["wo"], dt), {"k": k_buf, "v": v_buf}
 
 
 # ======================================================================
@@ -288,14 +313,14 @@ def _mla_qkv(params, x, cfg, positions):
     b, s, _ = x.shape
     dt = x.dtype
     h = cfg.n_heads
-    cq = rms_norm(x @ wload(params["wdq"], dt), params["q_norm"],
+    cq = rms_norm(apply_w(x, params["wdq"], dt), params["q_norm"],
                   cfg.norm_eps)
-    q = (cq @ wload(params["wuq"], dt)).reshape(
+    q = apply_w(cq, params["wuq"], dt).reshape(
         b, s, h, m.qk_nope_dim + m.qk_rope_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
 
-    ckv_full = x @ wload(params["wdkv"], dt)
+    ckv_full = apply_w(x, params["wdkv"], dt)
     ckv, k_rope = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
     ckv_n = rms_norm(ckv, params["kv_norm"], cfg.norm_eps)
@@ -319,7 +344,7 @@ def mla_forward(params, x, cfg, spec, positions, return_cache=False):
         q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv, scale=scale,
         fused=cfg.fused_attention)
     out = out.reshape(b, s, cfg.n_heads * m.v_head_dim)
-    y = out @ wload(params["wo"], dt)
+    y = apply_w(out, params["wo"], dt)
     if not return_cache:
         return y
     return y, {"ckv": ckv_n, "k_rope": k_rope[:, :, 0, :]}
@@ -340,24 +365,45 @@ def mla_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
     b = x.shape[0]
     dt = x.dtype
     h = cfg.n_heads
-    pos_arr = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1            # (B,) continuous-batching positions
+    pos_arr = pos[:, None] if per_slot else jnp.reshape(pos, (1,))
     stacked = layer_idx is not None
 
-    cq = rms_norm(x @ wload(params["wdq"], dt), params["q_norm"],
+    cq = rms_norm(apply_w(x, params["wdq"], dt), params["q_norm"],
                   cfg.norm_eps)
-    q = (cq @ wload(params["wuq"], dt)).reshape(
+    q = apply_w(cq, params["wuq"], dt).reshape(
         b, h, m.qk_nope_dim + m.qk_rope_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     q_rope = apply_rope(q_rope[:, None], pos_arr,
                         cfg.rope_theta)[:, 0]            # (B,H,rope)
 
-    ckv_full = (x @ wload(params["wdkv"], dt))[:, 0]     # (B, lora+rope)
+    ckv_full = apply_w(x, params["wdkv"], dt)[:, 0]      # (B, lora+rope)
     ckv_new, k_rope_new = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
     ckv_new = rms_norm(ckv_new, params["kv_norm"], cfg.norm_eps)
     k_rope_new = apply_rope(k_rope_new[:, None, None, :], pos_arr,
                             cfg.rope_theta)[:, 0, 0]
 
-    if stacked:
+    if per_slot:
+        rows = jnp.arange(b)
+        if stacked:
+            ckv_buf = cache["ckv"].at[layer_idx, rows, pos].set(
+                ckv_new.astype(cache["ckv"].dtype))
+            kr_buf = cache["k_rope"].at[layer_idx, rows, pos].set(
+                k_rope_new.astype(cache["k_rope"].dtype))
+            with jax.named_scope("fused_flash_attention"
+                                 if cfg.fused_attention else "cache_read"):
+                ckv = jax.lax.dynamic_index_in_dim(ckv_buf, layer_idx, 0,
+                                                   keepdims=False)
+                k_rope = jax.lax.dynamic_index_in_dim(kr_buf, layer_idx, 0,
+                                                      keepdims=False)
+        else:
+            ckv = cache["ckv"].at[rows, pos].set(
+                ckv_new.astype(cache["ckv"].dtype))
+            k_rope = cache["k_rope"].at[rows, pos].set(
+                k_rope_new.astype(cache["k_rope"].dtype))
+            ckv_buf, kr_buf = ckv, k_rope
+    elif stacked:
         zero = jnp.int32(0)
         ckv_buf = jax.lax.dynamic_update_slice(
             cache["ckv"], ckv_new[None, :, None].astype(
@@ -394,7 +440,8 @@ def mla_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
              + jnp.einsum("bhr,bsr->bhs", q_rope, k_rope,
                           preferred_element_type=jnp.float32))
         s = s / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-        valid = jnp.arange(ckv.shape[1])[None, None, :] <= pos
+        p_cmp = pos[:, None, None] if per_slot else pos
+        valid = jnp.arange(ckv.shape[1])[None, None, :] <= p_cmp
         s = jnp.where(valid, s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1).astype(dt)
         return jnp.einsum("bhs,bsl->bhl", p, ckv)        # (B,H,lora)
@@ -406,5 +453,5 @@ def mla_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
         o_latent = _core(q_abs, q_rope, ckv, k_rope)
     out = jnp.einsum("bhl,lhv->bhv", o_latent, w_uv)     # (B,H,v)
     out = out.reshape(b, 1, h * m.v_head_dim)
-    return out @ wload(params["wo"], dt), {"ckv": ckv_buf,
-                                           "k_rope": kr_buf}
+    return apply_w(out, params["wo"], dt), {"ckv": ckv_buf,
+                                            "k_rope": kr_buf}

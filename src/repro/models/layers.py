@@ -15,18 +15,50 @@ def cdtype(cfg):
     return jnp.dtype(cfg.dtype)
 
 
+# Serving weight forms (runtime/compressed.py) register here on import:
+# {leaf type: (apply_fn(x, leaf, dt) -> y, load_fn(leaf, dt) -> dense)}.
+# The registry lives in layers — not runtime — so models never import
+# runtime (which imports models back).
+_WEIGHT_FORMS: dict[type, tuple] = {}
+
+
+def register_weight_form(cls, apply_fn, load_fn) -> None:
+    """Register a compressed weight-form leaf class. ``apply_fn`` runs
+    x @ W in streaming/compressed form; ``load_fn`` materializes the
+    dense matrix (embed lookups, parity checks)."""
+    _WEIGHT_FORMS[cls] = (apply_fn, load_fn)
+
+
 def wload(leaf, dt):
-    """Load a weight for compute: dense array, or LC-quantized pack
+    """Load a weight for compute: dense array, a registered compressed
+    weight form (materialized), or an LC-quantized pack
     {"idx": uint8 codebook indices, "cb": (K,) f32 codebook}.
 
     The quantized path is the paper's compressed-serving deployment —
     on TPU it runs through kernels/quant_matmul (dequant fused in VMEM;
     only uint8 indices touch HBM). The jax.named_scope tag lets the
     dry-run account it as that fused kernel."""
+    form = _WEIGHT_FORMS.get(type(leaf))
+    if form is not None:
+        return form[1](leaf, dt)
     if isinstance(leaf, dict) and "idx" in leaf:
         with jax.named_scope("fused_quant_matmul"):
             return leaf["cb"][leaf["idx"].astype(jnp.int32)].astype(dt)
     return leaf.astype(dt)
+
+
+def apply_w(x, leaf, dt):
+    """x @ W for a param-tree weight leaf, dispatched by form.
+
+    Dense leaves (and legacy quantized dicts) take exactly the
+    pre-existing ``x @ wload(leaf, dt)`` path — training math is
+    bit-identical. Registered compressed forms (4-bit quantized,
+    low-rank factored, pruned-sparse) run their streaming kernel
+    without materializing W."""
+    form = _WEIGHT_FORMS.get(type(leaf))
+    if form is not None:
+        return form[0](x, leaf, dt)
+    return x @ wload(leaf, dt)
 
 
 def dense_init(key, shape, in_axis: int = 0) -> jnp.ndarray:
@@ -78,9 +110,9 @@ def init_dense_ffn(key, d_model: int, d_ff: int) -> dict:
 
 def dense_ffn(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
     dt = cdtype(cfg)
-    g = x @ wload(params["w_gate"], dt)
-    u = x @ wload(params["w_up"], dt)
-    return (jax.nn.silu(g) * u) @ wload(params["w_down"], dt)
+    g = apply_w(x, params["w_gate"], dt)
+    u = apply_w(x, params["w_up"], dt)
+    return apply_w(jax.nn.silu(g) * u, params["w_down"], dt)
 
 
 # ----------------------------------------------------------------------
@@ -108,14 +140,14 @@ def embed(params: dict, inputs: jnp.ndarray, cfg) -> jnp.ndarray:
     if cfg.input_mode == "tokens":
         x = wload(params["tokens"], dt)[inputs]
         return x * jnp.asarray(np.sqrt(cfg.d_model), dt)
-    return inputs.astype(dt) @ wload(params["proj"], dt)
+    return apply_w(inputs.astype(dt), params["proj"], dt)
 
 
 def unembed(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
     dt = cdtype(cfg)
     if cfg.tie_embeddings and cfg.input_mode == "tokens":
         return x @ wload(params["tokens"], dt).T
-    return x @ wload(params["unembed"], dt)
+    return apply_w(x, params["unembed"], dt)
 
 
 def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.distributed.sharding import constrain
 from repro.models.attention import read_layer_cache, write_layer_cache
-from repro.models.layers import dense_init, rms_norm
+from repro.models.layers import apply_w, dense_init, rms_norm
 
 
 # ======================================================================
@@ -104,17 +104,17 @@ def mamba_forward(params, x, cfg, spec, positions, chunk: int = 128,
     b, s, _ = x.shape
     dt_ = x.dtype
 
-    xz = x @ params["in_proj"].astype(dt_)
+    xz = apply_w(x, params["in_proj"], dt_)
     xi, z = jnp.split(xz, 2, axis=-1)
     xi = constrain(xi, ("batch", "seq", "inner"))
     xi, conv_tail = _causal_conv(xi, params["conv_w"].astype(dt_),
                                  params["conv_b"].astype(dt_))
     xi = jax.nn.silu(xi)
 
-    xdbl = xi @ params["x_proj"].astype(dt_)
+    xdbl = apply_w(xi, params["x_proj"], dt_)
     dt_raw, b_ssm, c_ssm = jnp.split(xdbl, [dtr, dtr + m.d_state], axis=-1)
     dt = jax.nn.softplus(
-        dt_raw @ params["dt_proj"].astype(dt_)
+        apply_w(dt_raw, params["dt_proj"], dt_)
         + params["dt_bias"].astype(dt_))             # (B,S,di)
     a = -jnp.exp(params["A_log"])                    # (di, ds) f32
 
@@ -144,7 +144,7 @@ def mamba_forward(params, x, cfg, spec, positions, chunk: int = 128,
     y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)
     y = y + xi * params["D"].astype(dt_)[None, None]
     y = y * jax.nn.silu(z)
-    out = y @ params["out_proj"].astype(dt_)
+    out = apply_w(y, params["out_proj"], dt_)
     if not return_cache:
         return out
     return out, {"conv": conv_tail, "ssm": h_last}
@@ -170,17 +170,17 @@ def mamba_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
     b = x.shape[0]
     dt_ = x.dtype
 
-    xz = x @ params["in_proj"].astype(dt_)
+    xz = apply_w(x, params["in_proj"], dt_)
     xi, z = jnp.split(xz, 2, axis=-1)
     xi, conv_state = _causal_conv(
         xi, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_),
         state=cache["conv"])
     xi = jax.nn.silu(xi)[:, 0]                       # (B, di)
 
-    xdbl = xi @ params["x_proj"].astype(dt_)
+    xdbl = apply_w(xi, params["x_proj"], dt_)
     dt_raw, b_ssm, c_ssm = jnp.split(xdbl, [dtr, dtr + m.d_state], axis=-1)
     dt = jax.nn.softplus(
-        dt_raw @ params["dt_proj"].astype(dt_)
+        apply_w(dt_raw, params["dt_proj"], dt_)
         + params["dt_bias"].astype(dt_)).astype(jnp.float32)  # (B,di)
     a = -jnp.exp(params["A_log"])
     da = jnp.exp(dt[..., None] * a[None])            # (B,di,ds)
@@ -190,7 +190,7 @@ def mamba_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
     y = jnp.einsum("bds,bs->bd", h, c_ssm.astype(jnp.float32)).astype(dt_)
     y = y + xi * params["D"].astype(dt_)[None]
     y = y * jax.nn.silu(z[:, 0])
-    out = (y @ params["out_proj"].astype(dt_))[:, None]
+    out = apply_w(y, params["out_proj"], dt_)[:, None]
     return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}
 
 
@@ -235,10 +235,10 @@ def mlstm_axes(cfg) -> dict:
 
 
 def _mlstm_gates(params, xc, b, s, h):
-    li = (xc @ params["wi"].astype(xc.dtype)).astype(jnp.float32) \
+    li = apply_w(xc, params["wi"], xc.dtype).astype(jnp.float32) \
         + params["bi"]                                 # (B,S,H) log-i
     lf = jax.nn.log_sigmoid(
-        (xc @ params["wf"].astype(xc.dtype)).astype(jnp.float32)
+        apply_w(xc, params["wf"], xc.dtype).astype(jnp.float32)
         + params["bf"])                                # (B,S,H) log-f
     return li, lf
 
@@ -253,14 +253,14 @@ def mlstm_forward(params, x, cfg, spec, positions, return_cache=False):
     assert s % c == 0
     nc = s // c
 
-    xz = x @ params["up_proj"].astype(dt_)
+    xz = apply_w(x, params["up_proj"], dt_)
     xm, z = jnp.split(xz, 2, axis=-1)
     xc, conv_tail = _causal_conv(xm, params["conv_w"].astype(dt_),
                                  params["conv_b"].astype(dt_))
     xc = jax.nn.silu(xc)
-    q = (xc @ params["wq"].astype(dt_)).reshape(b, s, hn, dh)
-    k = (xc @ params["wk"].astype(dt_)).reshape(b, s, hn, dh) / np.sqrt(dh)
-    v = (xm @ params["wv"].astype(dt_)).reshape(b, s, hn, dh)
+    q = apply_w(xc, params["wq"], dt_).reshape(b, s, hn, dh)
+    k = apply_w(xc, params["wk"], dt_).reshape(b, s, hn, dh) / np.sqrt(dh)
+    v = apply_w(xm, params["wv"], dt_).reshape(b, s, hn, dh)
     li, lf = _mlstm_gates(params, xc, b, s, hn)
 
     # chunk views: (B, nc, c, ...) → scan over nc
@@ -326,7 +326,7 @@ def mlstm_forward(params, x, cfg, spec, positions, return_cache=False):
     hseq = jnp.moveaxis(hs, 0, 1).reshape(b, s, di)
     hseq = rms_norm(hseq, params["out_norm"], cfg.norm_eps)
     out = hseq * jax.nn.silu(z)
-    y = out @ params["down_proj"].astype(dt_)
+    y = apply_w(out, params["down_proj"], dt_)
     if not return_cache:
         return y
     return y, {"conv": conv_tail, "C": c_f, "n": n_f, "m": m_f}
@@ -353,19 +353,19 @@ def mlstm_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
     b = x.shape[0]
     dt_ = x.dtype
 
-    xz = x @ params["up_proj"].astype(dt_)
+    xz = apply_w(x, params["up_proj"], dt_)
     xm, z = jnp.split(xz, 2, axis=-1)
     xc, conv_state = _causal_conv(
         xm, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_),
         state=cache["conv"])
     xc = jax.nn.silu(xc)[:, 0]
     xm = xm[:, 0]
-    q = (xc @ params["wq"].astype(dt_)).reshape(b, hn, dh)
-    k = (xc @ params["wk"].astype(dt_)).reshape(b, hn, dh) / np.sqrt(dh)
-    v = (xm @ params["wv"].astype(dt_)).reshape(b, hn, dh)
-    li = (xc @ params["wi"].astype(dt_)).astype(jnp.float32) + params["bi"]
+    q = apply_w(xc, params["wq"], dt_).reshape(b, hn, dh)
+    k = apply_w(xc, params["wk"], dt_).reshape(b, hn, dh) / np.sqrt(dh)
+    v = apply_w(xm, params["wv"], dt_).reshape(b, hn, dh)
+    li = apply_w(xc, params["wi"], dt_).astype(jnp.float32) + params["bi"]
     lf = jax.nn.log_sigmoid(
-        (xc @ params["wf"].astype(dt_)).astype(jnp.float32) + params["bf"])
+        apply_w(xc, params["wf"], dt_).astype(jnp.float32) + params["bf"])
 
     q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
     m_new = jnp.maximum(lf + cache["m"], li)
@@ -381,7 +381,7 @@ def mlstm_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
         jnp.exp(-m_new)) + 1e-6
     hvec = (num / den[..., None]).reshape(b, di).astype(dt_)
     hvec = rms_norm(hvec, params["out_norm"], cfg.norm_eps)
-    out = (hvec * jax.nn.silu(z[:, 0])) @ params["down_proj"].astype(dt_)
+    out = apply_w(hvec * jax.nn.silu(z[:, 0]), params["down_proj"], dt_)
     return out[:, None], {
         "conv": conv_state.astype(cache["conv"].dtype),
         "C": c_new, "n": n_new, "m": m_new}
@@ -451,7 +451,7 @@ def slstm_forward(params, x, cfg, spec, positions, return_cache=False):
     di, dh, ff = _slstm_dims(cfg)
     b, s, _ = x.shape
     dt_ = x.dtype
-    wx = (x @ params["w"].astype(dt_)).astype(jnp.float32)  # (B,S,4di)
+    wx = apply_w(x, params["w"], dt_).astype(jnp.float32)   # (B,S,4di)
 
     def step(state, wx_t):
         return _slstm_cell(params, wx_t, state, cfg)
@@ -462,8 +462,8 @@ def slstm_forward(params, x, cfg, spec, positions, return_cache=False):
                                             jnp.moveaxis(wx, 1, 0))
     h = jnp.moveaxis(hs, 0, 1).astype(dt_)                  # (B,S,di)
     h = rms_norm(h, params["out_norm"], cfg.norm_eps)
-    u, g = jnp.split(h @ params["up_proj"].astype(dt_), 2, axis=-1)
-    y = (u * jax.nn.silu(g)) @ params["down_proj"].astype(dt_)
+    u, g = jnp.split(apply_w(h, params["up_proj"], dt_), 2, axis=-1)
+    y = apply_w(u * jax.nn.silu(g), params["down_proj"], dt_)
     if not return_cache:
         return y
     return y, {"c": c_f, "n": n_f, "h": h_f, "m": m_f}
@@ -482,10 +482,10 @@ def slstm_decode(params, x, cache, pos, cfg, spec, layer_idx=None):
         out, new_local = slstm_decode(params, x, local, pos, cfg, spec)
         return out, write_layer_cache(cache, new_local, layer_idx)
     dt_ = x.dtype
-    wx = (x[:, 0] @ params["w"].astype(dt_)).astype(jnp.float32)
+    wx = apply_w(x[:, 0], params["w"], dt_).astype(jnp.float32)
     st = (cache["c"], cache["n"], cache["h"], cache["m"])
     (c, n, h, m), _ = _slstm_cell(params, wx, st, cfg)
     hn = rms_norm(h.astype(dt_), params["out_norm"], cfg.norm_eps)
-    u, g = jnp.split(hn @ params["up_proj"].astype(dt_), 2, axis=-1)
-    out = ((u * jax.nn.silu(g)) @ params["down_proj"].astype(dt_))[:, None]
+    u, g = jnp.split(apply_w(hn, params["up_proj"], dt_), 2, axis=-1)
+    out = apply_w(u * jax.nn.silu(g), params["down_proj"], dt_)[:, None]
     return out, {"c": c, "n": n, "h": h, "m": m}

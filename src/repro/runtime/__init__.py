@@ -1,8 +1,15 @@
 from repro.runtime.fault_tolerance import (
     FaultInjector, RetryPolicy, StragglerMonitor)
 from repro.runtime.trainer import LCTrainer, TrainerConfig
-from repro.runtime.server import Server, quantize_params_for_serving
+from repro.runtime.compressed import (
+    LowRankWeight, QuantizedWeight, SparseWeight)
+from repro.runtime.server import (
+    FinishedRequest, Request, Server, ServingEngine,
+    densified_for_serving, load_compressed_for_serving,
+    quantize_params_for_serving)
 
 __all__ = ["FaultInjector", "RetryPolicy", "StragglerMonitor",
-           "LCTrainer", "TrainerConfig", "Server",
-           "quantize_params_for_serving"]
+           "LCTrainer", "TrainerConfig", "Server", "ServingEngine",
+           "Request", "FinishedRequest", "QuantizedWeight",
+           "LowRankWeight", "SparseWeight", "load_compressed_for_serving",
+           "densified_for_serving", "quantize_params_for_serving"]

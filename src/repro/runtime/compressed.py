@@ -1,0 +1,210 @@
+"""Compressed weight forms for serving: param-tree leaves that execute
+without ever materializing the dense matrix.
+
+LC training ends with Θ per scheme family — codebook+assignments
+(quantize), thin factors (lowrank), a sparse survivor set (prune). For
+deployment each 2-D weight leaf is *replaced* in the param tree by one
+of the pytree classes below; the model code dispatches matmuls through
+``layers.apply_w``, which routes each form to its streaming kernel:
+
+==============  =======================  ==========================
+form            HBM read per decode      kernel
+==============  =======================  ==========================
+dense (bf16)    K·N·2 B                  plain MXU matmul
+QuantizedWeight K·N/2 B (4-bit) + cb     kernels/quant_matmul (fused
+                or K·N B (8-bit)         nibble-unpack + dequant)
+LowRankWeight   r·(K+N)·2 B              kernels/lowrank/serve (two
+                                         thin matmuls, W never built)
+SparseWeight    nnz·(2+4+4) B            kernels/prune/serve (COO
+                                         gather/scatter)
+==============  =======================  ==========================
+
+Decode is HBM-bound, so these byte counts are the roofline; the modeled
+ceilings surface in ``BENCH_serve.json`` via :func:`weight_form_bytes`.
+
+The classes register with ``layers.register_weight_form`` on import
+(registry lives in layers to avoid a models→runtime import cycle), are
+registered jax pytrees (arrays as children, shape/bits as static aux),
+and keep ``__init__`` free of array ops so tracers flow through
+flatten/unflatten untouched.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lowrank import serve as lowrank_serve
+from repro.kernels.prune import serve as prune_serve
+from repro.kernels.quant_matmul import ops as quant_ops
+from repro.kernels.quant_matmul import ref as quant_ref
+from repro.models import layers
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedWeight:
+    """Codebook-quantized weight. ``bits=4``: ``packed`` is
+    (ceil(K/2), N) uint8, two indices per byte; ``bits=8``: (K, N)
+    uint8 plain indices. ``shape`` = (K, N) of the dense weight."""
+
+    def __init__(self, packed, codebook, shape, bits):
+        self.packed = packed
+        self.codebook = codebook
+        self.shape = tuple(shape)
+        self.bits = int(bits)
+
+    def tree_flatten(self):
+        return (self.packed, self.codebook), (self.shape, self.bits)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def __repr__(self):
+        return (f"QuantizedWeight(shape={self.shape}, bits={self.bits}, "
+                f"codes={self.codebook.shape[0]})")
+
+
+@jax.tree_util.register_pytree_node_class
+class LowRankWeight:
+    """Factored weight W = u @ vt. u: (K, r); vt: (r, N)."""
+
+    def __init__(self, u, vt):
+        self.u = u
+        self.vt = vt
+
+    @property
+    def shape(self):
+        return (self.u.shape[0], self.vt.shape[1])
+
+    def tree_flatten(self):
+        return (self.u, self.vt), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):
+        return f"LowRankWeight(shape={self.shape}, rank={self.u.shape[1]})"
+
+
+@jax.tree_util.register_pytree_node_class
+class SparseWeight:
+    """Pruned weight in COO form: W[rows[i], cols[i]] = values[i],
+    zeros elsewhere. ``shape`` = (K, N), static (the scatter needs N at
+    trace time)."""
+
+    def __init__(self, values, rows, cols, shape):
+        self.values = values
+        self.rows = rows
+        self.cols = cols
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.values, self.rows, self.cols), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def __repr__(self):
+        return (f"SparseWeight(shape={self.shape}, "
+                f"nnz={self.values.shape[0]})")
+
+
+WEIGHT_FORMS = (QuantizedWeight, LowRankWeight, SparseWeight)
+
+
+# ----------------------------------------------------------------------
+# Execution (apply = x @ W without materializing W; load = dense W)
+# ----------------------------------------------------------------------
+def _quant_apply(x, w: QuantizedWeight, dt):
+    k, n = w.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    if w.bits == 4:
+        if k % 2:  # odd K: packed has a pad row of index 0; feed zero x
+            x2 = jnp.pad(x2, ((0, 0), (0, 1)))
+        y = quant_ops.matmul_packed(x2, w.packed, w.codebook)
+    else:
+        y = quant_ops.matmul(x2, w.packed, w.codebook)
+    return y.reshape(*lead, n).astype(dt)
+
+
+def _quant_load(w: QuantizedWeight, dt):
+    k, _ = w.shape
+    idx = quant_ref.unpack4_ref(w.packed)[:k] if w.bits == 4 else w.packed
+    return w.codebook[idx.astype(jnp.int32)].astype(dt)
+
+
+def _lowrank_apply(x, w: LowRankWeight, dt):
+    return lowrank_serve.lowrank_matmul(x, w.u, w.vt).astype(dt)
+
+
+def _lowrank_load(w: LowRankWeight, dt):
+    return lowrank_serve.materialize_lowrank(w.u, w.vt).astype(dt)
+
+
+def _sparse_apply(x, w: SparseWeight, dt):
+    return prune_serve.sparse_matmul(
+        x, w.values, w.rows, w.cols, w.shape[1]).astype(dt)
+
+
+def _sparse_load(w: SparseWeight, dt):
+    return prune_serve.densify(
+        w.values, w.rows, w.cols, w.shape).astype(dt)
+
+
+layers.register_weight_form(QuantizedWeight, _quant_apply, _quant_load)
+layers.register_weight_form(LowRankWeight, _lowrank_apply, _lowrank_load)
+layers.register_weight_form(SparseWeight, _sparse_apply, _sparse_load)
+
+
+def materialize(leaf, dt=jnp.float32):
+    """Dense array for any weight-form leaf (parity checks, embed
+    lookups). Dense leaves pass through as ``leaf.astype(dt)``."""
+    return layers.wload(leaf, dt)
+
+
+# ----------------------------------------------------------------------
+# HBM accounting (modeled bf16 deployment)
+# ----------------------------------------------------------------------
+def is_weight_form(leaf) -> bool:
+    return isinstance(leaf, WEIGHT_FORMS) or (
+        isinstance(leaf, dict) and "idx" in leaf)
+
+
+def weight_form_bytes(leaf) -> int:
+    """Modeled HBM bytes to stream this leaf once at decode. Dense
+    leaves count at 2 B/elem (bf16 deployment) regardless of the host
+    dtype the bench runs in; codebooks/coordinates at their true
+    width."""
+    if isinstance(leaf, QuantizedWeight):
+        return int(leaf.packed.size) + 4 * int(leaf.codebook.size)
+    if isinstance(leaf, LowRankWeight):
+        return 2 * (int(leaf.u.size) + int(leaf.vt.size))
+    if isinstance(leaf, SparseWeight):
+        return (2 * int(leaf.values.size)
+                + 4 * (int(leaf.rows.size) + int(leaf.cols.size)))
+    if isinstance(leaf, dict) and "idx" in leaf:  # legacy uint8 pack
+        return int(leaf["idx"].size) + 4 * int(leaf["cb"].size)
+    return 2 * int(leaf.size)
+
+
+def tree_weight_bytes(params) -> int:
+    """Total modeled weight-stream bytes for one decode step over the
+    whole param tree."""
+    total = 0
+
+    def visit(leaf):
+        nonlocal total
+        total += weight_form_bytes(leaf)
+
+    jax.tree_util.tree_map(visit, params, is_leaf=is_weight_form)
+    return total
+
+
+def decode_hbm_bytes_per_token(params, batch: int = 1) -> float:
+    """Roofline model for batched decode: weights stream once per step
+    and are amortized over the ``batch`` tokens produced. Ceiling
+    tokens/sec = HBM_BW / this."""
+    return tree_weight_bytes(params) / max(batch, 1)
