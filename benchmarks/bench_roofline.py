@@ -1,34 +1,189 @@
-"""Roofline summary from the dry-run artifacts (results/dryrun/*.json):
-per (arch × shape × mesh): three terms, bottleneck, modeled step time.
-``us_per_call`` = modeled step time (max of the three terms)."""
+"""Roofline bench: predicted-vs-measured per-group C-step time through
+the group planner + AOT executable cache.
+
+Self-contained (no dry-run artifacts needed): live multi-task groups
+are built from the scenario matrix's own task derivation
+(``matrix_common.build_tasks`` over reduced configs from
+``enumerate_cells``), each group is planned through the roofline cost
+model (``repro.analysis.cost``), AOT-compiled once via
+``core.grouping.compile_group``, and executed over ``BOUNDARIES``
+repeated μ boundaries. Per group the row reports the plan's modeled
+time next to the measured wall time of the compiled executable.
+
+Two HARD asserts (the PR's cache contract — CI runs this in the
+planner-smoke job):
+
+* re-entering ``compile_group`` at every boundary after the first must
+  hit the executable cache — zero re-lowers/re-compiles;
+* re-planning the same groups must hit the plan cache — zero re-plans.
+
+``ROOFLINE_ARCHS`` / ``ROOFLINE_FAMILIES`` (comma-separated env vars)
+shrink the sweep; the bench caps itself at ``MAX_GROUPS`` groups and
+still asserts at least ``MIN_GROUPS`` were planned (the acceptance
+floor), logging any cap in the row stream.
+"""
 from __future__ import annotations
 
-import glob
-import json
 import os
+import time
+
+MIN_GROUPS = 8
+MAX_GROUPS = 12
+BOUNDARIES = 3
+REPEATS = 3
+
+_DEFAULT_ARCHS = ("deepseek-moe-16b", "phi3-mini-3.8b")
+_DEFAULT_FAMILIES = ("quantize", "prune", "lowrank", "rankselect")
+
+
+def _env_list(name: str, default) -> list[str]:
+    v = os.environ.get(name, "").strip()
+    return [s for s in v.split(",") if s] if v else list(default)
+
+
+def _collect_groups():
+    """Yield (cell, group, xs, thetas, backend) for every multi-task
+    group of the selected matrix cells, up to MAX_GROUPS."""
+    import jax
+    from benchmarks import matrix_common
+    from repro.configs import get_config, reduced_config
+    from repro.core.algorithm import LCAlgorithm
+    from repro.core.grouping import build_groups
+    from repro.models import init_params
+
+    archs = _env_list("ROOFLINE_ARCHS", _DEFAULT_ARCHS)
+    families = _env_list("ROOFLINE_FAMILIES", _DEFAULT_FAMILIES)
+    cells = matrix_common.enumerate_cells(archs, families)
+    out, capped = [], False
+    for arch, family in cells:
+        if len(out) >= MAX_GROUPS:
+            capped = True
+            break
+        cfg = reduced_config(get_config(arch))
+        tasks = matrix_common.build_tasks(cfg, family)
+        if not tasks:
+            continue
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        algo = LCAlgorithm(tasks, [1e-3]).resolve(params)
+        xs_all = {t.name: t.compressible(params) for t in algo.tasks}
+        for group in build_groups(algo.tasks, xs_all, backend="auto"):
+            if len(group) < 2:
+                continue
+            if len(out) >= MAX_GROUPS:
+                capped = True
+                break
+            xs = {t.name: xs_all[t.name] for t in group}
+            thetas = {t.name: t.scheme_init(xs[t.name]) for t in group}
+            out.append((f"{arch}/{family}", group, xs, thetas))
+    return out, capped
+
+
+def _measure_ms(compiled, mu_values, arrays) -> float:
+    """Median-of-min wall ms for one executable call across the μ
+    boundaries (the same executable serves every μ — it is traced)."""
+    import jax
+    import jax.numpy as jnp
+
+    best = []
+    for mu in mu_values:
+        times = []
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            res = compiled(jnp.float32(mu), *arrays)
+            jax.block_until_ready(res)
+            times.append(time.perf_counter() - t0)
+        best.append(min(times))
+    best.sort()
+    return best[len(best) // 2] * 1e3
 
 
 def run() -> list[dict]:
+    from repro.analysis import cost
+    from repro.core.grouping import (
+        _plan_multi_group, _task_solver, compile_group)
+
+    cost.clear_caches()
+    hw = cost.detect_hardware()
+    groups, capped = _collect_groups()
+    mu_values = [1e-3 * 2.0**k for k in range(BOUNDARIES)]
+
     rows = []
-    files = sorted(glob.glob("results/dryrun/*.json"))
-    if not files:
-        return [{"name": "roofline/missing", "us_per_call": 0.0,
-                 "derived": "run: python -m repro.launch.dryrun --all"}]
-    for f in files:
-        d = json.load(open(f))
-        cell = f"{d['arch']}/{d['shape']}/{d['mesh']}"
-        if d["status"] != "ok":
-            rows.append({"name": f"roofline/{cell}", "us_per_call": 0.0,
-                         "derived": d["status"]})
-            continue
-        t = max(d["t_compute_s"], d["t_memory_s"], d["t_collective_s"])
+    for cell, group, xs, thetas in groups:
+        t0 = group[0]
+        counts = [t.view.item_count(xs[t.name]) for t in group]
+        solver_fn, _ = _task_solver(t0.scheme, "auto")
+        plan = _plan_multi_group(group, xs, thetas, counts, solver_fn,
+                                 None, None, "auto")
+
+        # boundary 1 compiles; boundaries 2.. must hit the exec cache
+        stats0 = cost.cache_stats()
+        compiled, arrays = compile_group(group, xs, thetas,
+                                         backend="auto", plan=plan)
+        after_first = cost.cache_stats()
+        for _ in range(1, BOUNDARIES):
+            compiled, arrays = compile_group(group, xs, thetas,
+                                             backend="auto", plan=plan)
+        stats1 = cost.cache_stats()
+        relowers = stats1["exec_misses"] - after_first["exec_misses"]
+        assert relowers == 0, (
+            f"{cell}: {relowers} executable re-compile(s) across "
+            f"{BOUNDARIES} boundaries — exec cache key unstable")
+        assert stats1["exec_hits"] - stats0["exec_hits"] \
+            >= BOUNDARIES - 1, f"{cell}: exec cache never hit"
+
+        measured_ms = _measure_ms(compiled, mu_values, arrays)
+        name = (f"roofline/{cell}/"
+                f"{'x'.join(str(d) for d in plan_item_shape(group, xs))}"
+                f"@{sum(counts)}")
         rows.append({
-            "name": f"roofline/{cell}",
-            "us_per_call": t * 1e6,
-            "derived": (f"bottleneck={d['bottleneck']} "
-                        f"tc={d['t_compute_s']:.2e} "
-                        f"tm={d['t_memory_s']:.2e} "
-                        f"tl={d['t_collective_s']:.2e} "
-                        f"rooffrac={d['roofline_fraction']:.4f}"),
+            "name": name,
+            "us_per_call": measured_ms * 1e3,
+            "derived": (f"pred={plan.modeled_ms:.4f}ms "
+                        f"meas={measured_ms:.4f}ms "
+                        f"bound={plan.bottleneck} "
+                        f"backend={plan.backend} chunks={plan.n_chunks} "
+                        f"src={plan.source}"),
+            "predicted_ms": plan.modeled_ms,
+            "measured_ms": measured_ms,
+            "bottleneck": plan.bottleneck,
+            "plan": plan.as_dict(),
+            "tasks": [t.name for t in group],
+            "n_items": sum(counts),
+            "boundaries": BOUNDARIES,
         })
+
+    # replan sweep: every group planned again must HIT the plan cache
+    before = cost.cache_stats()
+    for cell, group, xs, thetas in groups:
+        counts = [t.view.item_count(xs[t.name]) for t in group]
+        solver_fn, _ = _task_solver(group[0].scheme, "auto")
+        _plan_multi_group(group, xs, thetas, counts, solver_fn,
+                          None, None, "auto")
+    after = cost.cache_stats()
+    replans = after["plan_misses"] - before["plan_misses"]
+    assert replans == 0, (
+        f"{replans} re-plan(s) on identical groups — plan cache key "
+        "unstable")
+
+    assert len(rows) >= MIN_GROUPS, (
+        f"only {len(rows)} multi-task groups planned "
+        f"(need ≥{MIN_GROUPS}): widen ROOFLINE_ARCHS/FAMILIES")
+    stats = cost.cache_stats()
+    rows.append({
+        "name": "roofline/cache",
+        "us_per_call": 0.0,
+        "derived": (f"groups={len(rows)} hw={hw.name} "
+                    f"plan {stats['plan_hits']}h/"
+                    f"{stats['plan_misses']}m exec "
+                    f"{stats['exec_hits']}h/{stats['exec_misses']}m "
+                    f"relowers=0 replans=0"
+                    + (" CAPPED" if capped else "")),
+        "cache_stats": stats,
+        "hardware": hw.name,
+        "capped": capped,
+    })
     return rows
+
+
+def plan_item_shape(group, xs):
+    return group[0].view.item_shape(xs[group[0].name])

@@ -69,6 +69,41 @@ def _trace_findings():
     return check_retraces(algo, params, lc, boundaries=2)
 
 
+def _planner_findings():
+    """Planner-cache probe: a 4-task LC with two real multi-task groups
+    (2× quant, 2× prune — mixed κ packs via the per-item operand), run
+    planner-on across 3 boundaries plus a forced jit rebuild; every
+    re-trace must hit the plan cache (zero re-plans)."""
+    import jax.numpy as jnp
+
+    from repro.analysis.lint.trace_count import check_planner_cache
+    from repro.core.algorithm import LCAlgorithm
+    from repro.core.schemes.prune import ConstraintL0Pruning
+    from repro.core.schemes.quantize import AdaptiveQuantization
+    from repro.core.tasks import CompressionTask
+    from repro.core.views import AsStacked
+
+    params = {
+        "qa": jnp.linspace(-1.0, 1.0, 32).reshape(2, 16),
+        "qb": jnp.linspace(-3.0, 3.0, 32).reshape(2, 16),
+        "pa": jnp.linspace(1.0, -1.0, 32).reshape(2, 16),
+        "pb": jnp.linspace(2.0, -2.0, 32).reshape(2, 16),
+    }
+    tasks = [
+        CompressionTask("lint/quant/a", "qa", AsStacked("vector"),
+                        AdaptiveQuantization(k=2, iters=2)),
+        CompressionTask("lint/quant/b", "qb", AsStacked("vector"),
+                        AdaptiveQuantization(k=2, iters=2)),
+        CompressionTask("lint/prune/a", "pa", AsStacked("vector"),
+                        ConstraintL0Pruning(kappa=8)),
+        CompressionTask("lint/prune/b", "pb", AsStacked("vector"),
+                        ConstraintL0Pruning(kappa=4)),
+    ]
+    algo = LCAlgorithm(tasks, mu_schedule=[1e-3, 1e-2], planner="on")
+    lc = algo.init(params)
+    return check_planner_cache(algo, params, lc, boundaries=3)
+
+
 def _engine_trace_findings():
     """Retrace probe for the serving engine: a tiny one-attn-layer
     model served over a mixed-length trace; every compiled program must
@@ -111,13 +146,15 @@ def run_lint(paths=None, layers=ALL_LAYERS, root=None) -> Report:
         report.extend(check_schemes(), "contract")
     if "hlo" in layers:
         from repro.analysis.lint.hlo_rules import (
-            check_scheme_lowerings, check_serving_lowerings,
-            check_solvers)
+            check_planner_lowerings, check_scheme_lowerings,
+            check_serving_lowerings, check_solvers)
         report.extend(check_solvers(), "hlo")
         report.extend(check_scheme_lowerings(), "hlo")
+        report.extend(check_planner_lowerings(), "hlo")
         report.extend(check_serving_lowerings(), "hlo")
     if "trace" in layers:
         report.extend(_trace_findings(), "trace")
+        report.extend(_planner_findings(), "trace")
         report.extend(_engine_trace_findings(), "trace")
     return report
 

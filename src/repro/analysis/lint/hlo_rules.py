@@ -238,6 +238,66 @@ def check_serving_lowerings(slots: int = 2, max_len: int = 16,
     return findings
 
 
+def check_planner_lowerings(classes=None,
+                            backend: str | None = "auto") -> list[Finding]:
+    """Lower each scheme family's grouped C step through the *planner*
+    path — plan the representative group with the roofline cost model,
+    then stage exactly the program a planner-on C step runs
+    (``lower_group(..., plan=plan)``) — and run the module rules on it.
+
+    Adds the ``planner-silent-fallback`` rule: with no mesh the planner
+    is expected to refine its analytic estimate against the lowered
+    HLO (``plan.source == "hlo"``); a plan that stayed analytic without
+    recording an ``hlo-refine-failed:*`` fallback means the refinement
+    was skipped silently — decisions would quietly degrade to the
+    coarse model with nothing in the plan saying so."""
+    from repro.analysis.lint.contract import _rel_file, \
+        discover_scheme_classes
+    from repro.core.grouping import _plan_multi_group, _task_solver, \
+        lower_group
+
+    if classes is None:
+        classes = discover_scheme_classes()
+    findings = []
+    for cls in classes:
+        for i, ex in enumerate(cls.contract_examples()):
+            context = f"planner:{cls.__name__}[{i}]"
+            rel = _rel_file(cls)
+            try:
+                group, xs, thetas = representative_group(ex)
+                counts = [t.view.item_count(xs[t.name]) for t in group]
+                solver_fn, _ = _task_solver(ex, backend)
+                plan = _plan_multi_group(group, xs, thetas, counts,
+                                         solver_fn, None, None, backend)
+                with warnings.catch_warnings(record=True):
+                    warnings.simplefilter("always")
+                    text = _hlo_text(lower_group(group, xs, thetas,
+                                                 mu=1.0, backend=backend,
+                                                 plan=plan))
+            except Exception as e:  # noqa: BLE001 — reported, not raised
+                findings.append(Finding(
+                    "lower-failed", rel, context,
+                    f"planner-planned grouped C step failed to lower on "
+                    f"representative shapes: {type(e).__name__}: {e}",
+                    layer="hlo"))
+                continue
+            refine_recorded = any(
+                f.startswith("hlo-refine-") for f in plan.fallbacks)
+            if plan.source != "hlo" and not refine_recorded:
+                findings.append(Finding(
+                    "planner-silent-fallback", rel, context,
+                    f"plan stayed {plan.source!r} with mesh=None and no "
+                    "hlo-refine-failed/-skipped fallback recorded: the HLO "
+                    "refinement was skipped without leaving a trace in "
+                    "plan.fallbacks — planner decisions silently "
+                    "degrade to the coarse analytic model", layer="hlo"))
+            gspmd_claimed = bool(ex.gspmd_safe
+                                 and ex.kernel_dispatch_ready())
+            findings += _module_findings(text, rel, context,
+                                         gspmd_claimed=gspmd_claimed)
+    return findings
+
+
 def check_scheme_lowerings(classes=None,
                            backend: str | None = "auto") -> list[Finding]:
     """Lower each scheme family's grouped C step (via

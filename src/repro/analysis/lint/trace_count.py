@@ -85,6 +85,64 @@ def check_engine_retraces(engine, requests,
     return findings
 
 
+def check_planner_cache(algo, params, lc, boundaries: int = 3,
+                        context: str = "planner-cache") -> list[Finding]:
+    """``planner-replan`` / ``planner-inactive`` findings for the group
+    planner's memoization contract.
+
+    Runs ``boundaries`` identical LC boundaries on a planner-on algo,
+    then forces a full jit rebuild + re-trace (the
+    ``set_mesh``/``set_backend`` shape) and runs one more boundary. The
+    retrace re-enters ``_plan_multi_group`` for every group, and every
+    one of those lookups must HIT the plan cache: a miss means the plan
+    key is unstable across traces (an unhashable leaking in, an
+    id-based component) and each rebuild silently re-lowers/re-plans
+    every group."""
+    from repro.analysis import cost
+
+    if getattr(algo, "planner", None) != "on":
+        return [Finding(
+            "planner-inactive", "algorithm", context,
+            "planner-cache probe was handed a planner-off algo: the "
+            "check is vacuous — construct the probe LCAlgorithm with "
+            "planner='on'", layer="trace")]
+    run_boundaries(algo, params, lc, boundaries)
+    before = cost.cache_stats()
+    if before["plan_entries"] == 0:
+        return [Finding(
+            "planner-inactive", "algorithm", context,
+            "planner-on boundaries planned zero groups: the probe "
+            "tasks no longer form any multi-task group, so the cache "
+            "check is vacuous — give the probe ≥2 tasks per scheme "
+            "family", layer="trace")]
+    # a bare _build_steps() would NOT retrace — jax's shared pjit cache
+    # keys on the impl function object, which is unchanged. Re-wrapping
+    # through instrument() swaps in fresh closures, so the next step
+    # genuinely re-traces (the set_mesh/set_backend rebuild shape).
+    instrument(algo)
+    mu = float(algo.mu_schedule[0])
+    lc = algo.set_mu(lc, mu, 0)
+    lc = algo.c_step(params, lc)
+    after = cost.cache_stats()
+    findings = []
+    replans = after["plan_misses"] - before["plan_misses"]
+    if replans > 0:
+        findings.append(Finding(
+            "planner-replan", "algorithm", context,
+            f"{replans} group plan(s) re-planned on a jit rebuild over "
+            "identical shapes (expected 0 — every lookup should hit "
+            "the plan cache): the plan key is trace-unstable; check "
+            "repro.analysis.cost.plan_key covers only hashable, "
+            "identity-free components", layer="trace"))
+    if after["plan_hits"] <= before["plan_hits"] and not replans:
+        findings.append(Finding(
+            "planner-replan", "algorithm", context,
+            "jit rebuild produced neither plan-cache hits nor misses: "
+            "the rebuilt C step no longer consults the planner — "
+            "grouped_compress lost its planner wiring", layer="trace"))
+    return findings
+
+
 def check_retraces(algo, params, lc, boundaries: int = 2,
                    context: str = "lc-boundaries",
                    overlap: bool = False) -> list[Finding]:

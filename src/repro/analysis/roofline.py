@@ -19,10 +19,14 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-# TPU v5e-class hardware constants (per chip)
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # bytes/s
-LINK_BW = 50e9               # bytes/s per ICI link
+from repro.analysis.cost import TPU_V5E
+
+# TPU v5e-class hardware constants (per chip) — the dry-run target this
+# module always modeled. Sourced from ``analysis/cost.HardwareSpec``
+# now that the planner owns hardware detection; values are unchanged.
+PEAK_FLOPS = TPU_V5E.peak_flops   # bf16
+HBM_BW = TPU_V5E.hbm_bw           # bytes/s
+LINK_BW = TPU_V5E.link_bw         # bytes/s per ICI link
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,

@@ -67,7 +67,8 @@ class LCAlgorithm:
                  donate: bool | str = "auto",
                  mesh=None,
                  sharding_rules: dict | None = None,
-                 cstep_backend: str = "auto"):
+                 cstep_backend: str = "auto",
+                 planner: str | None = "on"):
         self.tasks = list(tasks)
         self.mu_schedule = list(mu_schedule)
         self.l_step = l_step
@@ -79,6 +80,10 @@ class LCAlgorithm:
         # ("auto" | "jnp" | "interpret" | "pallas" | "off"); resolved
         # per group by repro.kernels.dispatch — see docs/architecture.md
         self.cstep_backend = self._check_backend(cstep_backend)
+        # roofline-guided group planner ("on" | "off" | None≡"off"):
+        # picks backend/tile/chunking per group at trace time and
+        # memoizes the decision — see repro.analysis.cost
+        self.planner = self._check_planner(planner)
         if donate == "auto":
             # donation is a no-op (with a warning) on CPU; only ask for
             # in-place Θ/λ/a updates where XLA implements aliasing.
@@ -147,6 +152,22 @@ class LCAlgorithm:
                 f"cstep_backend must be one of {valid[1:]}, "
                 f"got {backend!r}")
         return backend
+
+    @staticmethod
+    def _check_planner(planner):
+        valid = (None, "on", "off")
+        if planner not in valid:
+            raise ValueError(
+                f"planner must be one of {valid}, got {planner!r}")
+        return planner
+
+    def set_planner(self, planner: str | None) -> "LCAlgorithm":
+        """Toggle the roofline group planner. Trace-time state like
+        :meth:`set_backend` (it decides which solver impl / tiling /
+        chunking the C-step HLO bakes in), so the steps are rebuilt."""
+        self.planner = self._check_planner(planner)
+        self._build_steps()
+        return self
 
     def set_backend(self, backend: str) -> "LCAlgorithm":
         """Select the kernel dispatch backend for the C step.
@@ -252,7 +273,8 @@ class LCAlgorithm:
         results = grouped_compress(self.tasks, xs, thetas, mu,
                                    mesh=self.mesh,
                                    rules=self.sharding_rules,
-                                   backend=self.cstep_backend)
+                                   backend=self.cstep_backend,
+                                   planner=self.planner)
         new_tasks = {}
         for t in self.tasks:
             theta, a_arr = results[t.name]
@@ -291,7 +313,8 @@ class LCAlgorithm:
                                mesh=self.mesh if self.group_tasks
                                else None,
                                rules=self.sharding_rules,
-                               backend=self.cstep_backend)
+                               backend=self.cstep_backend,
+                               planner=self.planner)
 
     def _multiplier_step_impl(self, params, lc):
         mu = lc["mu"]

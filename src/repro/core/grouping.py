@@ -82,6 +82,86 @@ def _task_solver(scheme, backend):
     return solver_lookup(scheme.solver, backend)
 
 
+def _abstract(tree):
+    """Pytree → matching ShapeDtypeStructs (works on arrays, tracers
+    and ShapeDtypeStructs alike — only shape/dtype are read)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _plan_multi_group(group, xs: dict, thetas: dict, counts: list[int],
+                      solver_fn, mesh, rules, backend):
+    """Plan one multi-task group through the roofline cost model.
+
+    The planner never changes *grouping*: ``solver_fn`` (resolved by
+    the static rule) already fixed whether the group packs for a named
+    batched solver, and the plan only re-picks the backend among the
+    registered implementations of that same solver, tunes its
+    items-grid tile, and decides chunking/shard_mode. Trace-safe: only
+    shapes/dtypes are consulted; the optional HLO refinement lowers on
+    ``ShapeDtypeStruct``s (and is skipped under a mesh). Plans are
+    cached in ``repro.analysis.cost`` keyed by the group signature, so
+    repeated LC boundaries — and jit-cache rebuilds — replan nothing.
+    """
+    from repro.analysis import cost as _cost
+    from repro.kernels.dispatch import registered_backends
+    t0 = group[0]
+    scheme = t0.scheme
+    batched = solver_fn is not None
+    sig = t0.group_signature(xs[t0.name], batched=batched)
+    n_items = sum(counts)
+    xs_a = {t.name: _abstract(xs[t.name]) for t in group}
+    th_a = {t.name: _abstract(thetas[t.name]) for t in group}
+    arrays = jax.eval_shape(
+        lambda xs_, th_: _pack_group(group, xs_, th_, counts,
+                                     solver_fn)[0], xs_a, th_a)
+    item_shape = t0.view.item_shape(xs[t0.name])
+    item_elems = 1
+    for d in item_shape:
+        item_elems *= int(d)
+    # per-row VMEM beyond the weight tile itself (codebook / threshold
+    # blocks); a coarse margin is enough to rank the tile candidates
+    extra_vmem = 4 * 128 * 4
+
+    # HLO refinement only for dispatch-path groups: lowering a
+    # vmap-path group traces the scheme's Python ``compress`` a second
+    # time at plan time, breaking the one-trace-per-group contract —
+    # and there is no named solver to re-pick for it anyway.
+    lower_fn, base_fallbacks = None, ()
+    if not batched:
+        base_fallbacks = ("hlo-refine-skipped:vmap-path",)
+    elif mesh is None:
+        def lower_fn(chosen):
+            lowered = lower_group(group, xs_a, th_a, mu=1.0,
+                                  backend=chosen)
+            return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+
+    return _cost.plan_group(
+        sig, n_items, arrays, (arrays[1], arrays[0]),
+        requested_backend=str(backend) if backend is not None else "off",
+        solver=scheme.solver if batched else None,
+        registered=registered_backends(scheme.solver if batched
+                                       else None),
+        gspmd_safe=bool(batched and scheme.gspmd_safe), mesh=mesh,
+        item_elems=item_elems, extra_vmem_per_row=extra_vmem,
+        lower_fn=lower_fn, base_fallbacks=base_fallbacks)
+
+
+def _apply_plan(scheme, solver_fn, plan):
+    """Re-resolve the group's solver under the planner's choices.
+
+    Only swaps among registered implementations of the *same* solver
+    (backend + tile); a vmap-path group (``solver_fn is None``) stays
+    on vmap — the plan never flips the grouping identity.
+    """
+    if plan is None or solver_fn is None:
+        return solver_fn
+    from repro.kernels.dispatch import lookup as solver_lookup
+    fn, _ = solver_lookup(scheme.solver, plan.backend,
+                          tile=plan.block_rows)
+    return fn if fn is not None else solver_fn
+
+
 def build_groups(tasks: Sequence[CompressionTask], xs: dict,
                  backend: str | None = None,
                  for_init: bool = False) -> list[list[CompressionTask]]:
@@ -121,7 +201,8 @@ def build_groups(tasks: Sequence[CompressionTask], xs: dict,
 def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
                     mesh: Mesh | None = None,
                     rules: dict | None = None,
-                    backend: str | None = None) -> list[dict]:
+                    backend: str | None = None,
+                    planner: str | None = None) -> list[dict]:
     """Human/bench-readable summary of the grouping a C step would use.
 
     With a ``mesh``, each entry also reports how the packed item axis
@@ -136,6 +217,13 @@ def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
     (``None`` = vmapped scheme program) and ``backend`` the resolved
     implementation that will run — e.g. a ``"pallas"`` request off-TPU
     reports ``"interpret"``.
+
+    ``planner="on"`` additionally attaches each multi-task group's
+    :class:`repro.analysis.cost.GroupPlan` as a ``plan`` dict (modeled
+    roofline terms, chosen backend/tile/chunks/shard_mode, recorded
+    fallbacks) — the same cached plan the C step will use, with Θ
+    shapes staged via ``jax.eval_shape`` of the scheme init (nothing
+    executes). When planned, ``backend`` reports the planner's choice.
     """
     out = []
     for group in build_groups(tasks, xs, backend=backend):
@@ -155,6 +243,16 @@ def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
             # workaround (docs/architecture.md)
             shard_mode = ("gspmd" if solver_fn is not None
                           and t0.scheme.gspmd_safe else "shard_map")
+        plan_dict = None
+        if planner == "on" and grouped:
+            counts = [t.view.item_count(xs[t.name]) for t in group]
+            thetas = {t.name: jax.eval_shape(t.scheme_init, xs[t.name])
+                      for t in group}
+            plan = _plan_multi_group(group, xs, thetas, counts,
+                                     solver_fn, mesh, rules, backend)
+            plan_dict = plan.as_dict()
+            if solver_fn is not None:
+                actual = plan.backend
         out.append({
             "scheme": t0.scheme.name,
             "item_shape": t0.view.item_shape(xs[t0.name]),
@@ -167,6 +265,7 @@ def describe_groups(tasks: Sequence[CompressionTask], xs: dict,
             "shard_mode": shard_mode,
             "solver": t0.scheme.solver if solver_fn is not None else None,
             "backend": actual,
+            "plan": plan_dict,
         })
     return out
 
@@ -191,9 +290,22 @@ def _constrain_replicated(tree, mesh):
             x, NamedSharding(mesh, P())), tree)
 
 
+def _chunk_bounds(n_items: int, n_chunks: int) -> list[tuple[int, int]]:
+    """Contiguous item-axis slices splitting ``n_items`` into
+    ``n_chunks`` near-equal launches (first chunks take the remainder)."""
+    n_chunks = max(1, min(int(n_chunks), n_items))
+    base, rem = divmod(n_items, n_chunks)
+    bounds, lo = [], 0
+    for i in range(n_chunks):
+        hi = lo + base + (1 if i < rem else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
 def _run_group_solve(solve, arrays: tuple, n_items: int,
                      mesh: Mesh | None, rules: dict | None,
-                     gspmd: bool = False):
+                     gspmd: bool = False, n_chunks: int = 1):
     """Run a packed-group solve, optionally sharded over the mesh.
 
     ``arrays`` are pytrees whose every leaf carries the packed item
@@ -209,6 +321,15 @@ def _run_group_solve(solve, arrays: tuple, n_items: int,
     itself. Correct only when every op in ``solve`` has an SPMD rule
     (no LAPACK custom calls); padded lanes are still independent items
     computed and discarded.
+
+    ``n_chunks > 1`` (planner-chosen when the packed working set blows
+    the VMEM/HBM budget) splits the *unsharded* solve into several
+    launches over contiguous item slices and re-concatenates Θ exactly.
+    Bit-identical to the single launch: packing (incl. the group-wide
+    trailing-dim padding) happened before the split and every batched
+    solver is per-item independent. Sharded groups never chunk here —
+    the planner records the ``chunking-disabled-under-mesh`` fallback
+    instead.
     """
     entry, pad = (None, 0)
     if mesh is not None:
@@ -245,6 +366,17 @@ def _run_group_solve(solve, arrays: tuple, n_items: int,
             theta_packed, a_packed = shard_map(
                 solve, mesh, in_specs=(spec,) * len(arrays),
                 out_specs=(spec, spec))(*arrays)
+    elif n_chunks > 1 and n_items > 1:
+        parts = []
+        for lo, hi in _chunk_bounds(n_items, n_chunks):
+            chunk = tuple(
+                jax.tree_util.tree_map(lambda x: x[lo:hi], a)
+                for a in arrays)
+            parts.append(solve(*chunk))
+        theta_packed = jax.tree_util.tree_map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0),
+            *[p[0] for p in parts])
+        a_packed = jnp.concatenate([p[1] for p in parts], axis=0)
     else:
         theta_packed, a_packed = solve(*arrays)
 
@@ -333,7 +465,7 @@ def _pack_group(group: Sequence[CompressionTask], xs: dict, thetas: dict,
 def lower_group(group: Sequence[CompressionTask], xs: dict, thetas: dict,
                 mu: float = 1.0, mesh: Mesh | None = None,
                 rules: dict | None = None, backend: str | None = None,
-                donate: bool = False):
+                donate: bool = False, plan=None):
     """Lower one group's packed C solve to HLO **without executing it**.
 
     The static-analysis hook behind ``repro.analysis.lint``'s HLO layer:
@@ -348,9 +480,18 @@ def lower_group(group: Sequence[CompressionTask], xs: dict, thetas: dict,
     Θ input donated, mirroring the engine's donated LC state, so a
     donation-aliasing check sees the engine's buffer story. A singleton
     group lowers the same packed program with one item.
+
+    ``plan`` (a :class:`repro.analysis.cost.GroupPlan`) stages the
+    *planner-chosen* program instead — backend/tile re-resolved through
+    :func:`_apply_plan` and the chunked launch structure included — so
+    the Layer-3 lint rules see exactly what a planner-on C step runs.
     """
     scheme = group[0].scheme
     solver_fn, _ = _task_solver(scheme, backend)
+    n_chunks = 1
+    if plan is not None:
+        n_chunks = plan.n_chunks
+        solver_fn = _apply_plan(scheme, solver_fn, plan)
     counts = [t.view.item_count(xs[t.name]) for t in group]
     n_items = sum(counts)
 
@@ -364,10 +505,62 @@ def lower_group(group: Sequence[CompressionTask], xs: dict, thetas: dict,
 
     def run(items, packed, *ops):
         return _run_group_solve(solve, (items, packed) + ops, n_items,
-                                mesh, rules, gspmd=gspmd)
+                                mesh, rules, gspmd=gspmd,
+                                n_chunks=n_chunks)
 
     jitted = jax.jit(run, donate_argnums=(1,) if donate else ())
     return jitted.lower(*arrays)
+
+
+def compile_group(group: Sequence[CompressionTask], xs: dict,
+                  thetas: dict, mesh: Mesh | None = None,
+                  rules: dict | None = None, backend: str | None = None,
+                  plan=None):
+    """AOT-compile one group's packed C solve, cached across boundaries.
+
+    The executable half of the planner cache: μ rides as the FIRST
+    traced argument (not baked into the trace like the jitted engine
+    path), so ONE compile serves every LC boundary — call the returned
+    executable as ``compiled(jnp.float32(mu), *arrays)`` and it returns
+    ``(packed_theta, packed_items)``. Executables are cached in
+    ``repro.analysis.cost`` keyed by the same group signature as plans;
+    repeated boundaries (and jit-cache rebuilds) pay zero
+    re-lower/re-trace — ``cost.cache_stats()`` proves it and
+    ``bench_roofline`` / the Layer-3 lint hard-assert it.
+
+    ``xs``/``thetas`` must hold concrete arrays (packing runs eagerly).
+    Returns ``(compiled, arrays)``.
+    """
+    from repro.analysis import cost as _cost
+    t0 = group[0]
+    scheme = t0.scheme
+    solver_fn, _ = _task_solver(scheme, backend)
+    n_chunks = 1
+    if plan is not None:
+        n_chunks = plan.n_chunks
+        solver_fn = _apply_plan(scheme, solver_fn, plan)
+    batched = solver_fn is not None
+    sig = t0.group_signature(xs[t0.name], batched=batched)
+    counts = [t.view.item_count(xs[t.name]) for t in group]
+    n_items = sum(counts)
+    arrays = _pack_group(group, xs, thetas, counts, solver_fn)[0]
+    gspmd = batched and scheme.gspmd_safe
+
+    def run(mu, items, packed, *ops):
+        solve = _group_solve(scheme, solver_fn, mu)
+        return _run_group_solve(solve, (items, packed) + ops, n_items,
+                                mesh, rules, gspmd=gspmd,
+                                n_chunks=n_chunks)
+
+    key = ("exec",) + _cost.plan_key(sig, n_items, arrays, mesh,
+                                     str(backend))
+
+    def build():
+        mu_sds = jax.ShapeDtypeStruct((), jnp.float32)
+        arrays_sds = _abstract(arrays)
+        return jax.jit(run).lower(mu_sds, *arrays_sds).compile()
+
+    return _cost.get_executable(key, build), arrays
 
 
 def solve_task(task: CompressionTask, x, theta, mu,
@@ -397,7 +590,8 @@ def solve_task(task: CompressionTask, x, theta, mu,
 def grouped_compress(tasks: Sequence[CompressionTask], xs: dict,
                      thetas: dict, mu, mesh: Mesh | None = None,
                      rules: dict | None = None,
-                     backend: str | None = None) -> dict:
+                     backend: str | None = None,
+                     planner: str | None = None) -> dict:
     """One C step over all tasks with grouped dispatch.
 
     Returns ``{task_name: (new_theta, a_arr)}`` where ``a_arr`` is the
@@ -407,6 +601,15 @@ def grouped_compress(tasks: Sequence[CompressionTask], xs: dict,
     sharded per the ``"items"`` rule — see the module docstring; the
     numerics are unchanged. With a kernel ``backend``, opted-in schemes
     solve through the dispatch layer's named batched solvers.
+
+    ``planner="on"`` routes every multi-task group through the roofline
+    cost model (``repro.analysis.cost``): backend re-picked among the
+    solver's registered implementations, Pallas tile rows tuned (TPU
+    only), oversized groups chunked into several launches. Results are
+    bit-identical to ``planner=None`` by construction — off-TPU the
+    planner resolves exactly the static rule and chunked solves
+    re-concatenate per-item-independent Θ exactly; plans are cached so
+    repeated boundaries replan nothing.
     """
     out = {}
     for group in build_groups(tasks, xs, backend=backend):
@@ -427,12 +630,19 @@ def grouped_compress(tasks: Sequence[CompressionTask], xs: dict,
         solver_fn, _ = _task_solver(scheme, backend)
         counts = [t.view.item_count(xs[t.name]) for t in group]
         n_items = sum(counts)
+        n_chunks = 1
+        if planner == "on":
+            plan = _plan_multi_group(group, xs, thetas, counts,
+                                     solver_fn, mesh, rules, backend)
+            n_chunks = plan.n_chunks
+            solver_fn = _apply_plan(scheme, solver_fn, plan)
         arrays, thetas_lead = _pack_group(group, xs, thetas, counts,
                                           solver_fn)
 
         new_packed, a_packed = _run_group_solve(
             _group_solve(scheme, solver_fn, mu), arrays, n_items, mesh,
-            rules, gspmd=solver_fn is not None and scheme.gspmd_safe)
+            rules, gspmd=solver_fn is not None and scheme.gspmd_safe,
+            n_chunks=n_chunks)
 
         theta_parts = unpack_thetas(new_packed, counts)
         if solver_fn is not None:

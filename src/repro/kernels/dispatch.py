@@ -73,11 +73,26 @@ REQUESTS = ("auto", "jnp", "interpret", "pallas", "off")
 
 _REGISTRY: dict[str, dict[str, Callable]] = {}
 
+#: solvers whose kernel path takes a planner-tunable items-grid tile
+#: (``block_rows=`` kwarg on the registered implementation). The group
+#: planner (``analysis/cost``) only offers tile choices for these.
+TILED_SOLVERS: dict[str, str] = {
+    "kmeans_lloyd": "block_rows",
+    "topk_mask": "block_rows",
+}
+
 
 def register(solver: str, backend: str, fn: Callable) -> None:
     """Register ``fn`` as the ``backend`` implementation of ``solver``."""
     assert backend in BACKENDS, backend
     _REGISTRY.setdefault(solver, {})[backend] = fn
+
+
+def registered_backends(solver: str | None) -> tuple[str, ...]:
+    """Backends actually carrying ``solver`` (planner input)."""
+    if solver is None or solver not in _REGISTRY:
+        return ()
+    return tuple(sorted(_REGISTRY[solver]))
 
 
 def _on_tpu() -> bool:
@@ -106,13 +121,20 @@ def resolve_backend(requested: str | None = "auto") -> str | None:
 
 
 def lookup(solver: str | None,
-           requested: str | None = "auto") -> tuple[Callable | None,
-                                                    str | None]:
+           requested: str | None = "auto",
+           tile: int | None = None) -> tuple[Callable | None,
+                                             str | None]:
     """(implementation, actual backend) for a solver name, or
     ``(None, None)`` when dispatch is off / the name is unregistered —
     the caller then uses its vmap fallback. A backend gap (name known,
     backend missing) falls back to the registered ``jnp`` solver so the
-    result is still batched."""
+    result is still batched.
+
+    ``tile`` (planner-chosen ``block_rows``) is bound onto the
+    implementation when the solver is tile-parameterized
+    (:data:`TILED_SOLVERS`) and the resolved backend runs the kernel
+    path; the jnp implementations ignore tiles by construction.
+    """
     backend = resolve_backend(requested)
     if backend is None or solver is None or solver not in _REGISTRY:
         return None, None
@@ -121,7 +143,11 @@ def lookup(solver: str | None,
         if "jnp" in impls:
             return impls["jnp"], "jnp"
         return None, None
-    return impls[backend], backend
+    fn = impls[backend]
+    if tile is not None and backend in ("pallas", "interpret") and \
+            solver in TILED_SOLVERS:
+        fn = partial(fn, **{TILED_SOLVERS[solver]: int(tile)})
+    return fn, backend
 
 
 def solver_table() -> dict[str, tuple[str, ...]]:

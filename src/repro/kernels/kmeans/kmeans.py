@@ -123,34 +123,43 @@ def _batched_kernel(w_ref, cb_ref, assign_ref, sums_ref, counts_ref,
         counts_ref[...] += part_counts
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("interpret", "block_rows"))
 def kmeans_assign_moments_batched(w: jnp.ndarray, codebooks: jnp.ndarray,
-                                  interpret: bool = True):
-    """w: (I, P) f32 (P % (ROWS·LANES) == 0 after ops.py padding);
+                                  interpret: bool = True,
+                                  block_rows: int = ROWS):
+    """w: (I, P) f32 (P % (block_rows·LANES) == 0 after ops.py padding);
     codebooks: (I, K) f32 → (assign (I, P) i32, sums (I, K),
-    counts (I, K)) — one pallas_call for the whole packed item group."""
+    counts (I, K)) — one pallas_call for the whole packed item group.
+
+    ``block_rows`` is the planner-tunable sublane tile height (default
+    the f32 minimum, 8; must be a multiple of 8). Larger tiles amortize
+    grid overhead at the cost of VMEM per step — the group planner
+    (``analysis/cost.choose_block_rows``) picks it per group.
+    """
     n_items, p = w.shape
     k = codebooks.shape[-1]
-    tile = ROWS * LANES
+    rows = int(block_rows)
+    assert rows >= ROWS and rows % ROWS == 0, rows
+    tile = rows * LANES
     assert p % tile == 0, f"pad to a multiple of {tile} in ops.py"
     n_tiles = p // tile
-    w3 = w.astype(jnp.float32).reshape(n_items, n_tiles * ROWS, LANES)
+    w3 = w.astype(jnp.float32).reshape(n_items, n_tiles * rows, LANES)
     cb2 = codebooks.astype(jnp.float32).reshape(n_items, k)
 
     assign3, sums2, counts2 = pl.pallas_call(
         partial(_batched_kernel, k=k),
         grid=(n_items, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, rows, LANES), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, k), lambda i, j: (i, 0)),  # per-item VMEM
         ],
         out_specs=[
-            pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, rows, LANES), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, k), lambda i, j: (i, 0)),  # per-item accum
             pl.BlockSpec((1, k), lambda i, j: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_items, n_tiles * ROWS, LANES),
+            jax.ShapeDtypeStruct((n_items, n_tiles * rows, LANES),
                                  jnp.int32),
             jax.ShapeDtypeStruct((n_items, k), jnp.float32),
             jax.ShapeDtypeStruct((n_items, k), jnp.float32),

@@ -67,13 +67,15 @@ def kmeans(w: jnp.ndarray, codebook0: jnp.ndarray, iters: int = 25,
 # batched solver — the "kmeans_lloyd" entry of the kernel dispatch layer
 # ----------------------------------------------------------------------
 def assign_moments_batched(w: jnp.ndarray, codebooks: jnp.ndarray,
-                           interpret: bool = True):
+                           interpret: bool = True,
+                           block_rows: int = ROWS):
     """Batched assignment + moments over a packed (I, P) item stack;
     pads each row internally (pad values clone each item's
     ``codebook[0]`` so padded elements land in cluster 0, then their
-    contribution is subtracted from the moments)."""
+    contribution is subtracted from the moments). ``block_rows`` is the
+    planner-chosen items-grid tile height (padding adapts to it)."""
     n_items, p = w.shape
-    tile = ROWS * LANES
+    tile = int(block_rows) * LANES
     pad = (-p) % tile
     if pad:
         wp = jnp.concatenate(
@@ -82,7 +84,7 @@ def assign_moments_batched(w: jnp.ndarray, codebooks: jnp.ndarray,
     else:
         wp = w
     assign, sums, counts = kmeans_assign_moments_batched(
-        wp, codebooks, interpret=interpret)
+        wp, codebooks, interpret=interpret, block_rows=int(block_rows))
     if pad:
         sums = sums.at[:, 0].add(-float(pad) * codebooks[:, 0])
         counts = counts.at[:, 0].add(-float(pad))
@@ -92,7 +94,8 @@ def assign_moments_batched(w: jnp.ndarray, codebooks: jnp.ndarray,
 
 def kmeans_batched(w: jnp.ndarray, codebooks0: jnp.ndarray,
                    kvalid: jnp.ndarray | None = None,
-                   iters: int = 25, impl: str = "jnp"):
+                   iters: int = 25, impl: str = "jnp",
+                   block_rows: int = ROWS):
     """Per-item Lloyd loop over a packed (I, P) item stack with per-item
     (I, K) warm-start codebooks → (codebooks (I, K), assign (I, P)).
 
@@ -131,10 +134,11 @@ def kmeans_batched(w: jnp.ndarray, codebooks0: jnp.ndarray,
     w = w.astype(jnp.float32)
     cb = jnp.sort(codebooks0.astype(jnp.float32), axis=-1)
     for _ in range(iters):
-        _, sums, counts = assign_moments_batched(w, cb,
-                                                 interpret=interpret)
+        _, sums, counts = assign_moments_batched(
+            w, cb, interpret=interpret, block_rows=block_rows)
         cb = jnp.sort(jnp.where(counts > 0,
                                 sums / jnp.maximum(counts, 1.0), cb),
                       axis=-1)
-    assign, _, _ = assign_moments_batched(w, cb, interpret=interpret)
+    assign, _, _ = assign_moments_batched(w, cb, interpret=interpret,
+                                          block_rows=block_rows)
     return cb, assign

@@ -184,7 +184,8 @@ def _safe_inv(s: jnp.ndarray) -> jnp.ndarray:
 def rsvd_spectrum_batched(w: jnp.ndarray, keys: jnp.ndarray,
                           k_sketch: int, power_iters: int = 2,
                           orth: str = "jacobi",
-                          orth_sweeps: int = 6, finish_sweeps: int = 12):
+                          orth_sweeps: int = 6, finish_sweeps: int = 12,
+                          q0: jnp.ndarray | None = None):
     """Batched top-``k_sketch`` spectrum of a packed item stack.
 
     ``w``: (I, m, n) f32; ``keys``: (I, 2) uint32 per-item PRNG keys
@@ -192,6 +193,16 @@ def rsvd_spectrum_batched(w: jnp.ndarray, keys: jnp.ndarray,
     Returns ``(u (I, m, k), s (I, k), v (I, n, k))`` with
     ``w ≈ u · diag(s) · vᵀ`` on the top-k subspace, all from batched
     matmuls + the Jacobi finisher.
+
+    ``q0`` (optional, (I, m, r0)) **warm-starts the range finder**: the
+    previous C step's left factor seeds the sketch basis, topped up
+    with fresh Gaussian sketch directions so genuinely new directions
+    still enter. At late μ, where Θ barely moves between LC
+    boundaries, this lets callers cut power iterations. Zero columns
+    in ``q0`` (masked ranks, a rank-0 previous Θ, all-zero items) are
+    backfilled with the fresh directions they shadow — the warm basis
+    never has less width than the cold one. The exact Gram path
+    ignores ``q0`` (it is already deterministic and exact).
 
     ``orth`` selects the range-finder orthogonalization: ``"jacobi"``
     (default — reuses the Jacobi eigh primitive, robust to
@@ -232,8 +243,22 @@ def rsvd_spectrum_batched(w: jnp.ndarray, keys: jnp.ndarray,
     else:
         orthonormalize = newton_schulz_orthonormalize
     omega = jax.vmap(
-        lambda key: jax.random.normal(key, (n, k), dtype=jnp.float32))(keys)
-    q = orthonormalize(jnp.einsum("imn,ink->imk", w, omega))
+        lambda key: jax.random.normal(key, (n, k),
+                                      dtype=jnp.float32))(keys)
+    y_fresh = jnp.einsum("imn,ink->imk", w, omega)
+    if q0 is not None:
+        # dead q0 columns (masked ranks, a rank-0 previous Θ, all-zero
+        # items) would silently shrink the basis below k — each one is
+        # backfilled with the fresh sketch direction it shadows, so the
+        # warm basis never has less width than the cold one
+        r0 = min(q0.shape[-1], k)
+        q0 = q0.astype(jnp.float32)[:, :, :r0]
+        live = jnp.sum(q0 * q0, axis=1, keepdims=True) > 0.0
+        head = jnp.where(live, q0, y_fresh[:, :, :r0])
+        y0 = jnp.concatenate([head, y_fresh[:, :, r0:]], axis=-1)
+    else:
+        y0 = y_fresh
+    q = orthonormalize(y0)
     for _ in range(power_iters):
         y = jnp.einsum("imn,ink->imk", w,
                        jnp.einsum("imn,imk->ink", w, q))

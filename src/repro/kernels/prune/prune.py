@@ -124,26 +124,30 @@ def _mask_batched_kernel(w_ref, t_ref, out_ref, *, strict: bool):
     out_ref[0] = jnp.where(keep, w, 0.0)
 
 
-def _tiled(w: jnp.ndarray):
+def _tiled(w: jnp.ndarray, rows: int = ROWS):
     n_items, p = w.shape
-    tile = ROWS * LANES
+    assert rows >= ROWS and rows % ROWS == 0, rows
+    tile = rows * LANES
     assert p % tile == 0, f"pad to a multiple of {tile} in ops.py"
     n_tiles = p // tile
-    return (w.astype(jnp.float32).reshape(n_items, n_tiles * ROWS, LANES),
+    return (w.astype(jnp.float32).reshape(n_items, n_tiles * rows, LANES),
             n_tiles)
 
 
-@partial(jax.jit, static_argnames=("interpret", "strict"))
+@partial(jax.jit, static_argnames=("interpret", "strict", "block_rows"))
 def count_above_batched(w: jnp.ndarray, t: jnp.ndarray,
-                        interpret: bool = True, strict: bool = True):
-    """w: (I, P) padded; t: (I,) per-item thresholds → counts (I,) f32."""
+                        interpret: bool = True, strict: bool = True,
+                        block_rows: int = ROWS):
+    """w: (I, P) padded; t: (I,) per-item thresholds → counts (I,) f32.
+    ``block_rows``: planner-tunable sublane tile height (multiple of 8)."""
     n_items, p = w.shape
-    w3, n_tiles = _tiled(w)
+    rows = int(block_rows)
+    w3, n_tiles = _tiled(w, rows)
     out = pl.pallas_call(
         partial(_count_batched_kernel, strict=strict),
         grid=(n_items, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, rows, LANES), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
@@ -153,23 +157,25 @@ def count_above_batched(w: jnp.ndarray, t: jnp.ndarray,
     return out[:, 0]
 
 
-@partial(jax.jit, static_argnames=("interpret", "strict"))
+@partial(jax.jit, static_argnames=("interpret", "strict", "block_rows"))
 def mask_apply_batched(w: jnp.ndarray, t: jnp.ndarray,
-                       interpret: bool = True, strict: bool = True):
+                       interpret: bool = True, strict: bool = True,
+                       block_rows: int = ROWS):
     """w: (I, P) padded; t: (I,) → w·1[|w| > t_i] per item, (I, P)
     (``strict=False``: |w| ≥ t_i)."""
     n_items, p = w.shape
-    w3, n_tiles = _tiled(w)
+    rows = int(block_rows)
+    w3, n_tiles = _tiled(w, rows)
     out = pl.pallas_call(
         partial(_mask_batched_kernel, strict=strict),
         grid=(n_items, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, rows, LANES), lambda i, j: (i, j, 0)),
             pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, ROWS, LANES), lambda i, j: (i, j, 0)),
+        out_specs=pl.BlockSpec((1, rows, LANES), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct(
-            (n_items, n_tiles * ROWS, LANES), jnp.float32),
+            (n_items, n_tiles * rows, LANES), jnp.float32),
         interpret=interpret,
     )(w3, t.reshape(n_items, 1).astype(jnp.float32))
     return out.reshape(n_items, p)

@@ -33,6 +33,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import cost
 from repro.kernels.lowrank import serve as lowrank_serve
 from repro.kernels.prune import serve as prune_serve
 from repro.kernels.quant_matmul import ops as quant_ops
@@ -121,12 +122,21 @@ def _quant_apply(x, w: QuantizedWeight, dt):
     k, n = w.shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, k).astype(jnp.float32)
+    # roofline-sized tile hints (repro.analysis.cost): static shapes in,
+    # static block sizes out — pure trace-time arithmetic, and the jnp
+    # reference path (CPU) ignores them entirely
+    tiles = cost.gemm_tiles(int(x2.shape[0]), n, k, packed=w.bits == 4)
     if w.bits == 4:
         if k % 2:  # odd K: packed has a pad row of index 0; feed zero x
             x2 = jnp.pad(x2, ((0, 0), (0, 1)))
-        y = quant_ops.matmul_packed(x2, w.packed, w.codebook)
+        y = quant_ops.matmul_packed(x2, w.packed, w.codebook,
+                                    bm=tiles["block_m"],
+                                    bn=tiles["block_n"],
+                                    bk2=max(tiles["block_k"] // 2, 128))
     else:
-        y = quant_ops.matmul(x2, w.packed, w.codebook)
+        y = quant_ops.matmul(x2, w.packed, w.codebook,
+                             bm=tiles["block_m"], bn=tiles["block_n"],
+                             bk=tiles["block_k"])
     return y.reshape(*lead, n).astype(dt)
 
 
